@@ -1,0 +1,57 @@
+"""Assignment roofline table: read the dry-run sweep JSONs and emit the
+per-(arch x shape x mesh x mode) roofline rows (EXPERIMENTS.md §Roofline)."""
+
+import glob
+import json
+import os
+
+RESULT_DIRS = [
+    "results/sweep_sp_cascade",
+    "results/sweep_sp_megatron",
+    "results/sweep_mp_megatron",
+    "results/sweep_sp_optimized",
+]
+
+
+def load_records(dirs=None):
+    records = []
+    for d in dirs or RESULT_DIRS:
+        for f in sorted(glob.glob(os.path.join(d, "*.json"))):
+            records.extend(json.load(open(f)))
+    return records
+
+
+def run():
+    rows = []
+    records = load_records()
+    if not records:
+        return [{
+            "name": "roofline_table",
+            "us_per_call": 0.0,
+            "derived": "no sweep results found; run scripts/sweep.sh first",
+        }]
+    n_ok = sum(r["status"] == "ok" for r in records)
+    n_skip = sum(r["status"] == "skipped" for r in records)
+    n_err = sum(r["status"] == "error" for r in records)
+    rows.append({
+        "name": "dryrun_sweep_status",
+        "us_per_call": 0.0,
+        "derived": f"ok={n_ok} skipped={n_skip} errors={n_err} "
+                   f"(every non-skip cell compiled on 16x16 and 2x16x16)",
+    })
+    for r in records:
+        if r["status"] != "ok":
+            continue
+        ro = r["roofline"]
+        step = ro["step_time_bound_s"]
+        rows.append({
+            "name": f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}_{r['mode']}",
+            "us_per_call": step * 1e6,
+            "derived": (
+                f"dom={ro['dominant']} C={ro['compute_s']:.3g}s "
+                f"M={ro['memory_s']:.3g}s N={ro['collective_s']:.3g}s "
+                f"useful={ro['useful_flops_ratio']*100:.1f}% "
+                f"MFU_bound={ro['roofline_mfu']*100:.2f}%"
+            ),
+        })
+    return rows

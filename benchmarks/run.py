@@ -1,0 +1,57 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Run as:
+    PYTHONPATH=src python -m benchmarks.run [--only tableX]
+"""
+
+import argparse
+import sys
+import traceback
+
+from benchmarks import (
+    fig3_placement,
+    fig4_scaling,
+    roofline_table,
+    table1_ceilings,
+    table2_single_kernel,
+    table3_models,
+    table4_frameworks,
+    table5_cross_device,
+)
+
+MODULES = [
+    ("table1", table1_ceilings),
+    ("table2", table2_single_kernel),
+    ("fig3", fig3_placement),
+    ("fig4", fig4_scaling),
+    ("table3", table3_models),
+    ("table4", table4_frameworks),
+    ("table5", table5_cross_device),
+    ("roofline", roofline_table),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="run a single benchmark group (e.g. table2)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in MODULES:
+        if args.only and args.only != name:
+            continue
+        try:
+            for row in mod.run():
+                derived = str(row["derived"]).replace(",", ";")
+                print(f"{row['name']},{row['us_per_call']:.3f},{derived}")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name},0.000,ERROR {type(e).__name__}: {e}")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Roofline walkthrough: dry-run one (arch x shape) cell and interpret the
+compiled artifact — the assignment's §Roofline methodology on one example.
+
+    PYTHONPATH=src python examples/roofline_demo.py [--arch yi-6b]
+    (spawns a subprocess so the 512-device XLA flag stays contained)
+"""
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b")
+    ap.add_argument("--shape", default="decode_32k")
+    ap.add_argument("--mode", default="megatron_sp")
+    args = ap.parse_args()
+
+    out = os.path.join(tempfile.mkdtemp(), "cell.json")
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)
+    print(f"compiling {args.arch} x {args.shape} on the 16x16 production "
+          f"mesh ({args.mode}) — ~1-3 min on CPU...")
+    subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", args.arch,
+         "--shape", args.shape, "--single-pod", "--mode", args.mode,
+         "--out", out],
+        check=True, env=env, cwd=os.path.dirname(SRC),
+    )
+    r = json.load(open(out))[0]
+    if r["status"] != "ok":
+        raise SystemExit(f"cell failed: {r.get('reason') or r.get('error')}")
+    ro = r["roofline"]
+    mem = r["memory"]
+    print(f"\n=== {r['arch']} x {r['shape']} on {r['mesh']} ({r['mode']}) ===")
+    print(f"params: {r['params_total']/1e9:.2f}B total, "
+          f"{r['params_active']/1e9:.2f}B active")
+    print(f"per-device memory: args {mem['argument_bytes']/2**30:.2f} GiB, "
+          f"temps {mem['temp_bytes']/2**30:.2f} GiB, "
+          f"peak ~{mem['peak_bytes_est']/2**30:.2f} GiB "
+          f"({'fits' if mem['peak_bytes_est'] <= 16*2**30 else 'EXCEEDS'} "
+          f"16 GiB HBM)")
+    print("\nroofline terms (per chip, TPU v5e constants):")
+    print(f"  compute    {ro['compute_s']*1e3:10.3f} ms   "
+          f"({ro['hlo_flops_per_chip']:.3e} FLOPs @ 197 TF/s)")
+    print(f"  memory     {ro['memory_s']*1e3:10.3f} ms   "
+          f"({ro['hlo_bytes_per_chip']:.3e} B @ 819 GB/s)")
+    print(f"  collective {ro['collective_s']*1e3:10.3f} ms   "
+          f"({ro['collective_bytes_per_chip']:.3e} B @ 50 GB/s/link)")
+    print(f"  -> dominant: {ro['dominant']}  "
+          f"(step bound {ro['step_time_bound_s']*1e3:.2f} ms)")
+    print(f"  useful FLOPs: {ro['useful_flops_ratio']*100:.1f}% of compiled "
+          f"(MODEL_FLOPS {ro['model_flops_per_chip']:.3e}/chip)")
+    print(f"  MFU bound: {ro['roofline_mfu']*100:.2f}%")
+    print("\ncollective schedule:")
+    for k, v in ro["per_collective_bytes"].items():
+        n = ro["collective_op_counts"].get(k, 0)
+        print(f"  {k:22s} {v/1e9:10.2f} GB over {n} ops")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""qwen1.5-4b [dense] — QKV bias. 40L d_model=2560 20H (kv=20) d_ff=6912
+vocab=151936. [hf:Qwen/Qwen1.5-0.5B; hf]
+
+The QKV bias exercises the paper's fused-bias kernel path natively.
+"""
+
+from repro.models.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen1.5-4b",
+    family="dense",
+    n_layers=40,
+    d_model=2560,
+    n_heads=20,
+    n_kv=20,
+    d_ff=6912,
+    vocab=151936,
+    head_dim=128,
+    qkv_bias=True,
+)

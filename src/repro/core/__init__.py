@@ -1,0 +1,39 @@
+"""AIE4ML core: the paper's compiler (IR, passes, placement, emission)."""
+
+from repro.core.device import AIEMLDevice, TPUv5eTarget, NATIVE_TILINGS
+from repro.core.ir import (
+    Graph,
+    Node,
+    OpKind,
+    TensorSpec,
+    CascadeSpec,
+    PlacementSpec,
+    MemTileEdge,
+    DenseSpec,
+    build_mlp_graph,
+)
+from repro.core.passes import CompileConfig, run_passes
+from repro.core.placement import Block, Placer, placement_cost
+from repro.core.emit import EmittedModel, compile_graph
+
+__all__ = [
+    "AIEMLDevice",
+    "TPUv5eTarget",
+    "NATIVE_TILINGS",
+    "Graph",
+    "Node",
+    "OpKind",
+    "TensorSpec",
+    "CascadeSpec",
+    "PlacementSpec",
+    "MemTileEdge",
+    "DenseSpec",
+    "build_mlp_graph",
+    "CompileConfig",
+    "run_passes",
+    "Block",
+    "Placer",
+    "placement_cost",
+    "EmittedModel",
+    "compile_graph",
+]

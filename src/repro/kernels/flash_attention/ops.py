@@ -1,0 +1,59 @@
+"""Jit'd wrapper for the flash-attention kernel: padding + auto-interpret."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "q_start", "block_q", "block_k", "interpret"))
+def _padded(q, k, v, *, causal, q_start, block_q, block_k, interpret):
+    return flash_attention_pallas(
+        q, k, v, causal=causal, q_start=q_start,
+        block_q=block_q, block_k=block_k, interpret=interpret)
+
+
+def flash_attention(
+    q: jnp.ndarray,   # [BH, Sq, hd]
+    k: jnp.ndarray,   # [BH, Sk, hd]
+    v: jnp.ndarray,   # [BH, Sk, hd]
+    *,
+    causal: bool = True,
+    q_start: int = 0,
+    block_q: Optional[int] = None,
+    block_k: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    BH, Sq, hd = q.shape
+    Sk = k.shape[1]
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    bq = block_q or (128 if not interpret else min(_ceil_to(Sq, 8), 32))
+    bk = block_k or (128 if not interpret else min(_ceil_to(Sk, 8), 32))
+    Sqp, Skp = _ceil_to(Sq, bq), _ceil_to(Sk, bk)
+    qp = jnp.pad(q, ((0, 0), (0, Sqp - Sq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, Skp - Sk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, Skp - Sk), (0, 0)))
+    if Skp > Sk:
+        # mask padded keys by pushing them outside the causal window; for
+        # non-causal, bias via a large-negative value through v? Simplest:
+        # rely on causal masking when padded; for non-causal inputs the
+        # caller must pass block-divisible Sk.
+        if not causal:
+            raise ValueError("non-causal flash requires Sk % block_k == 0")
+        # padded keys have kpos > every valid qpos only if Sq == Sk
+        if Sqp != Skp:
+            raise ValueError("causal flash padding requires Sq == Sk")
+    out = _padded(qp, kp, vp, causal=causal, q_start=q_start,
+                  block_q=bq, block_k=bk, interpret=interpret)
+    return out[:, :Sq]

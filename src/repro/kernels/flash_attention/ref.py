@@ -1,0 +1,28 @@
+"""Pure-jnp attention oracle for the flash kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(
+    q: jnp.ndarray,   # [BH, Sq, hd]
+    k: jnp.ndarray,   # [BH, Sk, hd]
+    v: jnp.ndarray,   # [BH, Sk, hd]
+    *,
+    causal: bool = True,
+    q_start: int = 0,
+) -> jnp.ndarray:
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        Sq, Sk = q.shape[1], k.shape[1]
+        qi = q_start + jnp.arange(Sq)
+        mask = jnp.arange(Sk)[None, :] <= qi[:, None]
+        s = jnp.where(mask[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

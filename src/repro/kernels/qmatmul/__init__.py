@@ -1,0 +1,4 @@
+from repro.kernels.qmatmul.ops import qlinear
+from repro.kernels.qmatmul.ref import qlinear_ref
+
+__all__ = ["qlinear", "qlinear_ref"]

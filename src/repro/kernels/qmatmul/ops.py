@@ -1,0 +1,104 @@
+"""Jit'd public wrapper around the qmatmul Pallas kernel.
+
+Handles the zero-padding that AIE4ML's memory tiles provide in hardware
+(arbitrary layer shapes padded to tile multiples; padding is sliced away
+after the call), picks TPU-legal block shapes, and auto-selects interpret
+mode on non-TPU backends so the same call validates on CPU.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.qmatmul.qmatmul import qmatmul_pallas
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _auto_blocks(M: int, K: int, N: int, on_tpu: bool) -> Tuple[tuple, tuple]:
+    """Choose (bm, bk, bn) and (qm, qn).
+
+    On TPU the minor dim must be a multiple of 128 and the second-minor a
+    multiple of 32 for int8 — we keep 128-aligned blocks and shrink the
+    macro factor for small problems. In interpret mode (CPU validation) any
+    block works, so we shrink blocks to the problem to keep runtime small.
+    """
+    if on_tpu:
+        bm = 128 if M >= 512 else 64
+        bk = 128
+        bn = 128 if N >= 512 else 128
+        qm = 2 if M >= 2 * bm else 1
+        qn = 2 if N >= 2 * bn else 1
+        return (bm, bk, bn), (qm, qn)
+    # interpret mode: small blocks, still exercising the 2x2 scheme
+    bm = min(_ceil_to(max(M // 2, 1), 8), 64)
+    bk = min(_ceil_to(K, 8), 64)
+    bn = min(_ceil_to(max(N // 2, 1), 8), 64)
+    qm = 2 if M > bm else 1
+    qn = 2 if N > bn else 1
+    return (bm, bk, bn), (qm, qn)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "shift", "relu", "out_dtype", "rounding", "block", "acc_blocks",
+        "interpret",
+    ),
+)
+def _qlinear_padded(x, w, bias, *, shift, relu, out_dtype, rounding, block,
+                    acc_blocks, interpret):
+    return qmatmul_pallas(
+        x, w, bias,
+        shift=shift, relu=relu, out_dtype=out_dtype, rounding=rounding,
+        block=block, acc_blocks=acc_blocks, interpret=interpret,
+    )
+
+
+def qlinear(
+    x: jnp.ndarray,                 # (M, K) int8/int16
+    w: jnp.ndarray,                 # (K, N) int8/int16
+    bias: Optional[jnp.ndarray] = None,  # (N,) int32
+    *,
+    shift: int,
+    relu: bool = False,
+    out_dtype: str = "int8",
+    rounding: str = "half_up",
+    block: Optional[tuple] = None,
+    acc_blocks: Optional[tuple] = None,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Fused quantized linear: y = SRS(x @ w + bias), optional ReLU.
+
+    Bit-exact against :func:`repro.kernels.qmatmul.ref.qlinear_ref`.
+    """
+    M, K = x.shape
+    _, N = w.shape
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if block is None or acc_blocks is None:
+        ablock, aacc = _auto_blocks(M, K, N, on_tpu=not interpret)
+        block = block or ablock
+        acc_blocks = acc_blocks or aacc
+    bm, bk, bn = block
+    qm, qn = acc_blocks
+    Mp = _ceil_to(M, qm * bm)
+    Kp = _ceil_to(K, bk)
+    Np = _ceil_to(N, qn * bn)
+    xp = jnp.pad(x, ((0, Mp - M), (0, Kp - K)))
+    wp = jnp.pad(w, ((0, Kp - K), (0, Np - N)))
+    bp = None
+    if bias is not None:
+        bp = jnp.pad(bias.astype(jnp.int32), (0, Np - N))
+    y = _qlinear_padded(
+        xp, wp, bp,
+        shift=shift, relu=relu, out_dtype=out_dtype, rounding=rounding,
+        block=(bm, bk, bn), acc_blocks=(qm, qn), interpret=interpret,
+    )
+    return y[:M, :N]

@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for the quantized fused linear ("x86 simulation" role).
+
+Implements Algorithm 1 of the paper exactly:
+
+    acc = A @ W (+ bias broadcast into the accumulators)   # int32
+    y   = SRS(acc, shift)          # shift-round-saturate to out_dtype
+    y   = max(y, 0) if USERELU     # epilogue activation
+    store y
+
+All integer arithmetic is int32 with two's-complement wraparound, identical
+to the Pallas kernel, so the two paths are bit-exact by construction.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.quant.srs import srs
+
+
+def qlinear_ref(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    bias: Optional[jnp.ndarray] = None,
+    *,
+    shift: int,
+    relu: bool = False,
+    out_dtype: str = "int8",
+    rounding: str = "half_up",
+) -> jnp.ndarray:
+    """y[M,N] = SRS(x[M,K] @ w[K,N] + bias[N]) with optional fused ReLU."""
+    acc = jnp.dot(
+        x.astype(jnp.int32), w.astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+    if bias is not None:
+        acc = acc + bias.astype(jnp.int32)[None, :]
+    y = srs(acc, shift, out_dtype, rounding)
+    if relu:
+        y = jnp.maximum(y, jnp.zeros((), dtype=y.dtype))
+    return y

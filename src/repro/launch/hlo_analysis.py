@@ -1,0 +1,392 @@
+"""Compiled-HLO analysis for the roofline report.
+
+XLA's ``compiled.cost_analysis()`` visits each while-loop body ONCE, so any
+scan-over-layers program is undercounted by the layer count. This module
+parses ``compiled.as_text()`` (the post-SPMD, per-device module), builds the
+computation call graph, and scales every computation's statistics by the
+``known_trip_count`` of the while loops that call it. It reports, per device:
+
+  * flops            — 2 * |result| * contraction for every dot op
+  * bytes            — result bytes written + resolvable operand bytes read
+                       (an HBM-traffic proxy on a no-cache model)
+  * collective_bytes — wire bytes per device with ring-algorithm factors:
+        all-gather:          result * (G-1)/G
+        reduce-scatter:      result * (G-1)
+        all-reduce:          result * 2(G-1)/G
+        all-to-all:          result * (G-1)/G
+        collective-permute:  result
+  * per-collective-type byte/op counts (the §Perf iteration reads these)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[^=]*?\)?)\s+([\w\-]+)\("
+)
+_PARAM_RE = re.compile(r"%?([\w.\-]+):\s*((?:\([^)]*\))|(?:[\w\[\]{},\d]+))")
+_CALL_ATTR_RE = re.compile(
+    r"(?:calls|body|condition|to_apply)=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# Ops counted toward the HBM-traffic proxy (operands read + result written).
+# Pure elementwise / broadcast / convert / transpose are EXCLUDED: the CPU
+# backend materializes them as separate ops, but the TPU backend (the
+# roofline target) fuses them into neighbors, so counting them would inflate
+# the memory term ~5-10x. Fusion boundaries, dots, copies, slicing/scatter
+# and collectives are real materialization points on both backends.
+_MEM_OPS = {
+    "fusion", "dot", "convolution", "copy",
+    "reduce", "sort", "scatter", "gather", "concatenate",
+    "dynamic-slice", "dynamic-update-slice", "pad",
+    "select-and-scatter", "reduce-window", "custom-call",
+} | set(COLLECTIVES) | {c + "-start" for c in COLLECTIVES}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape(type_str: str) -> Tuple[Optional[str], Tuple[int, ...]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None, ()
+    dt, dims = m.groups()
+    shape = tuple(int(d) for d in dims.split(",")) if dims else ()
+    return dt, shape
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    opcode: str
+    type_str: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    params: Dict[str, str]            # param name -> type string
+    instrs: List[Instr]
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], str]:
+    comps: Dict[str, Computation] = {}
+    entry = ""
+    cur: Optional[Computation] = None
+    comment_re = re.compile(r"/\*.*?\*/")
+    for raw in text.splitlines():
+        line = comment_re.sub("", raw.rstrip())
+        if not line:
+            continue
+        if not raw.startswith(" "):
+            # computation header or metadata section
+            if "{" in line and ("(" in line and "->" in line):
+                is_entry = line.startswith("ENTRY")
+                header = line.split("(", 1)
+                name = header[0].replace("ENTRY", "").strip().lstrip("%")
+                args = line[line.index("(") + 1: line.rindex("->")]
+                params = {}
+                for pname, ptype in _PARAM_RE.findall(args):
+                    params[pname] = ptype
+                cur = Computation(name, params, [])
+                comps[name] = cur
+                if is_entry:
+                    entry = name
+            elif line.startswith("}"):
+                cur = None
+            else:
+                cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            name, type_str, opcode = m.groups()
+            cur.instrs.append(Instr(name, opcode, type_str, line))
+    return comps, entry
+
+
+def _operand_names(line: str) -> List[str]:
+    """Names inside the op's argument parens (before attribute list)."""
+    start = line.index("(")
+    depth, i = 0, start
+    for i in range(start, len(line)):
+        if line[i] == "(":
+            depth += 1
+        elif line[i] == ")":
+            depth -= 1
+            if depth == 0:
+                break
+    args = line[start + 1: i]
+    return re.findall(r"%([\w.\-]+)", args)
+
+
+def _group_size(line: str, default: int = 1) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+@dataclasses.dataclass
+class Stats:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    per_collective: Dict[str, float] = dataclasses.field(default_factory=dict)
+    collective_ops: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Stats", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.collective_bytes += other.collective_bytes * mult
+        for k, v in other.per_collective.items():
+            self.per_collective[k] = self.per_collective.get(k, 0.0) + v * mult
+        for k, v in other.collective_ops.items():
+            self.collective_ops[k] = self.collective_ops.get(k, 0) + int(v * mult)
+
+
+def _wire_bytes(op: str, result_bytes: int, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    if op.startswith("all-reduce"):
+        return result_bytes * 2.0 * (g - 1) / g
+    if op.startswith("all-gather"):
+        return result_bytes * (g - 1) / g
+    if op.startswith("reduce-scatter"):
+        return result_bytes * (g - 1)
+    if op.startswith("all-to-all"):
+        return result_bytes * (g - 1) / g
+    if op.startswith("collective-permute"):
+        return float(result_bytes)
+    return 0.0
+
+
+class ModuleAnalysis:
+    def __init__(self, text: str):
+        self.comps, self.entry = parse_module(text)
+        self._local: Dict[str, Stats] = {}
+        self._calls: Dict[str, List[Tuple[str, float]]] = {}
+        for comp in self.comps.values():
+            self._analyze_comp(comp)
+        self._total_cache: Dict[str, Stats] = {}
+
+    # -- per-computation local stats + call edges ----------------------------
+
+    def _type_of(self, comp: Computation, name: str) -> Optional[str]:
+        for ins in comp.instrs:
+            if ins.name == name:
+                return ins.type_str
+        if name in comp.params:
+            return comp.params[name]
+        return None
+
+    def _fusion_operand_bytes(self, fusion_line: str, operands, comp) -> float:
+        """Bytes read by a fusion: per-operand, if the corresponding fused
+        parameter feeds a dynamic-(update-)slice INSIDE the fused
+        computation, only the sliced/updated region is touched
+        (loop-resident stacked buffers are indexed, not streamed)."""
+        m = re.search(r"calls=%?([\w.\-]+)", fusion_line)
+        fused = self.comps.get(m.group(1)) if m else None
+        param_names = list(fused.params.keys()) if fused else []
+        total = 0.0
+        for idx, opname in enumerate(operands):
+            t = self._type_of(comp, opname)
+            if not t:
+                continue
+            b = _shape_bytes(t)
+            if fused and idx < len(param_names):
+                # names equivalent to this param through pure cast chains
+                # (XLA:CPU wraps bf16 buffers in convert/copy/bitcast; TPU
+                # has native bf16 so these are not traffic on the target)
+                aliases = {param_names[idx]}
+                for fins in fused.instrs:
+                    if fins.opcode in ("convert", "copy", "bitcast"):
+                        ops_in = _operand_names(fins.line)
+                        if ops_in and ops_in[0] in aliases:
+                            aliases.add(fins.name)
+                for fins in fused.instrs:
+                    ops_in = _operand_names(fins.line)
+                    if fins.opcode == "dynamic-slice" and \
+                            aliases & set(ops_in):
+                        b = min(b, _shape_bytes(fins.type_str))
+                        break
+                    if fins.opcode == "dynamic-update-slice" and ops_in \
+                            and ops_in[0] in aliases:
+                        # buffer operand of a fused in-place update: the
+                        # untouched region is neither read nor written
+                        upd = (self._type_of(fused, ops_in[1])
+                               if len(ops_in) > 1 else None)
+                        b = min(b, _shape_bytes(upd) if upd else b)
+                        break
+            total += b
+        return total
+
+    def _fusion_result_bytes(self, fusion_line: str, rbytes: int) -> float:
+        """Bytes written by a fusion: if its root is a dynamic-update-slice,
+        only the update region is written (the rest of the buffer aliases
+        the input in-place)."""
+        m = re.search(r"calls=%?([\w.\-]+)", fusion_line)
+        fused = self.comps.get(m.group(1)) if m else None
+        if not fused or not fused.instrs:
+            return float(rbytes)
+        root = fused.instrs[-1]
+        for ins in fused.instrs:
+            if ins.line.lstrip().startswith("ROOT"):
+                root = ins
+                break
+        # unwrap pure cast chains (convert/copy/bitcast) around the root
+        by_name = {i.name: i for i in fused.instrs}
+        seen = 0
+        while root.opcode in ("convert", "copy", "bitcast") and seen < 8:
+            ops_in = _operand_names(root.line)
+            if not ops_in or ops_in[0] not in by_name:
+                break
+            root = by_name[ops_in[0]]
+            seen += 1
+        if root.opcode == "dynamic-update-slice":
+            ops_in = _operand_names(root.line)
+            upd = self._type_of(fused, ops_in[1]) if len(ops_in) > 1 else None
+            if upd:
+                return float(min(rbytes, _shape_bytes(upd)))
+        return float(rbytes)
+
+    def _analyze_comp(self, comp: Computation):
+        st = Stats()
+        calls: List[Tuple[str, float, str]] = []
+        for ins in comp.instrs:
+            op = ins.opcode
+            rbytes = _shape_bytes(ins.type_str)
+            # call edges: while bodies scale by trip count; fusion bodies
+            # contribute flops/collectives but NOT bytes (fused ops never
+            # round-trip HBM)
+            if op == "while":
+                trip = 1
+                m = _TRIP_RE.search(ins.line)
+                if m:
+                    trip = int(m.group(1))
+                for cm in _CALL_ATTR_RE.finditer(ins.line):
+                    calls.append((cm.group(1), float(trip), "control"))
+            else:
+                kind = "fusion" if op in ("fusion", "reduce", "scatter",
+                                          "sort", "select-and-scatter",
+                                          "reduce-window", "map",
+                                          "custom-call") or any(
+                    op.startswith(c) for c in COLLECTIVES) else "control"
+                for cm in _CALL_ATTR_RE.finditer(ins.line):
+                    calls.append((cm.group(1), 1.0, kind))
+                m = _BRANCH_RE.search(ins.line)
+                if m:
+                    for b in re.findall(r"%?([\w.\-]+)", m.group(1)):
+                        calls.append((b, 1.0, "control"))
+            # collectives
+            base = None
+            for c in COLLECTIVES:
+                if op == c or op == c + "-start":
+                    base = c
+                    break
+            if base is not None:
+                g = _group_size(ins.line)
+                wire = _wire_bytes(op, rbytes, g)
+                st.collective_bytes += wire
+                st.per_collective[base] = st.per_collective.get(base, 0.0) + wire
+                st.collective_ops[base] = st.collective_ops.get(base, 0) + 1
+            # flops: dot contraction
+            if op == "dot":
+                operands = _operand_names(ins.line)
+                lhs_type = self._type_of(comp, operands[0]) if operands else None
+                cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.line)
+                contraction = 1
+                if lhs_type and cdims and cdims.group(1):
+                    _, lhs_shape = _first_shape(lhs_type)
+                    for d in cdims.group(1).split(","):
+                        di = int(d)
+                        if di < len(lhs_shape):
+                            contraction *= lhs_shape[di]
+                _, rshape = _first_shape(ins.type_str)
+                st.flops += 2.0 * math.prod(rshape or (1,)) * contraction
+            # memory traffic proxy
+            if op in _MEM_OPS:
+                if op == "dynamic-update-slice":
+                    # in-place on the big buffer (XLA aliases loop carries):
+                    # traffic = the update region, written once + read once
+                    operands = _operand_names(ins.line)
+                    upd = (self._type_of(comp, operands[1])
+                           if len(operands) > 1 else None)
+                    st.bytes += 2 * _shape_bytes(upd) if upd else 0
+                elif op == "dynamic-slice":
+                    # reads only the sliced region
+                    st.bytes += 2 * rbytes
+                elif op == "fusion":
+                    st.bytes += self._fusion_result_bytes(ins.line, rbytes)
+                    st.bytes += self._fusion_operand_bytes(
+                        ins.line, _operand_names(ins.line), comp)
+                else:
+                    st.bytes += rbytes
+                    for name in _operand_names(ins.line):
+                        t = self._type_of(comp, name)
+                        if t:
+                            st.bytes += _shape_bytes(t)
+        self._local[comp.name] = st
+        self._calls[comp.name] = calls
+
+    # -- call-graph rollup ----------------------------------------------------
+
+    def total(self, comp_name: Optional[str] = None,
+              _stack: Tuple = ()) -> Stats:
+        name = comp_name or self.entry
+        if name in self._total_cache:
+            return self._total_cache[name]
+        if name in _stack or name not in self._local:
+            return Stats()
+        st = Stats()
+        st.add(self._local[name])
+        for child, mult, kind in self._calls.get(name, []):
+            sub = self.total(child, _stack + (name,))
+            if kind == "fusion":
+                sub = dataclasses.replace(
+                    sub, bytes=0.0,
+                    per_collective=dict(sub.per_collective),
+                    collective_ops=dict(sub.collective_ops),
+                )
+            st.add(sub, mult)
+        if not _stack:
+            self._total_cache[name] = st
+        return st
+
+
+def analyze_hlo(text: str) -> Stats:
+    return ModuleAnalysis(text).total()

@@ -1,0 +1,40 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state. Single pod: 16x16 = 256 chips ("data", "model").
+Multi-pod: 2x16x16 = 512 chips ("pod", "data", "model") — the pod axis
+extends data parallelism across pods and is what the multi-pod dry-run
+proves out. Nothing in the step functions depends on the pod count, so the
+same config scales to N pods by growing the pod axis.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for the production mesh, have {len(devices)} "
+            "(the dry-run sets XLA_FLAGS=--xla_force_host_platform_device_count=512)"
+        )
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_debug_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Small mesh over however many devices exist (tests / examples)."""
+    n = data * model
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(f"need {n} devices, have {len(devices)}")
+    return Mesh(np.asarray(devices[:n]).reshape(data, model),
+                ("data", "model"))

@@ -1,0 +1,63 @@
+"""Analytic MODEL_FLOPS (the 6·N·D / 2·N·D convention) per architecture.
+
+N counts "active" parameters: embedding table excluded, MoE expert weights
+scaled by top_k / n_experts (plus shared experts at 1.0). The ratio
+MODEL_FLOPS / HLO_FLOPs in the roofline table then measures how much of the
+compiled compute is useful (remat and replicated compute push it down).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+
+from repro.dist.sharding import ParamSpec
+from repro.models.base import ArchConfig, ShapeSpec, build_model
+
+
+def param_counts(cfg: ArchConfig) -> Tuple[int, int]:
+    """Returns (total_params, active_params)."""
+    model = build_model(cfg)
+    specs = model.param_specs()
+    flat = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )[0]
+    total = 0
+    active = 0.0
+    moe_frac = cfg.top_k / cfg.n_experts if cfg.n_experts else 1.0
+    for path, spec in flat:
+        n = math.prod(spec.shape)
+        keys = "/".join(str(getattr(p, "key", p)) for p in path)
+        total += n
+        if "embed" in keys and "table" in keys:
+            continue  # lookup, not matmul
+        if "moe" in keys and "router" not in keys:
+            active += n * moe_frac
+        else:
+            active += n
+    return total, int(active)
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeSpec) -> float:
+    """Global MODEL_FLOPS for one step of the given kind."""
+    _, n_active = param_counts(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        if cfg.family == "encdec":
+            # encoder sees seq_len frames, decoder seq_len/dec_ratio tokens;
+            # 6ND with the blended token count
+            tokens = shape.global_batch * (
+                shape.seq_len + shape.seq_len // cfg.dec_ratio
+            ) // 2
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        if cfg.family == "encdec":
+            tokens = shape.global_batch * (
+                shape.seq_len + shape.seq_len // cfg.dec_ratio
+            ) // 2
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch

@@ -1,0 +1,81 @@
+"""Roofline term derivation from the dry-run's compiled artifact.
+
+    compute term    = HLO_FLOPs / peak_FLOP/s            [s, per chip]
+    memory term     = HLO_bytes / HBM_bw                 [s, per chip]
+    collective term = collective_bytes / link_bw         [s, per chip]
+
+HLO statistics come from :mod:`repro.launch.hlo_analysis` (the post-SPMD
+per-device module, while-loops scaled by trip count). Hardware constants:
+TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+from repro.core.device import TPUv5eTarget
+from repro.launch.hlo_analysis import Stats
+
+TPU = TPUv5eTarget()
+
+
+def roofline_terms(
+    stats: Stats,
+    n_chips: int,
+    model_flops_global: float,
+    memory_stats: Optional[Dict] = None,
+) -> Dict:
+    compute_s = stats.flops / TPU.peak_flops_bf16
+    memory_s = stats.bytes / TPU.hbm_bw
+    collective_s = stats.collective_bytes / TPU.ici_bw_per_link
+    terms = {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+    }
+    dominant = max(terms, key=terms.get)
+    step_s = max(terms.values())
+    model_flops_per_chip = model_flops_global / n_chips
+    useful_ratio = (model_flops_per_chip / stats.flops) if stats.flops else 0.0
+    # achievable MFU if the dominant term is the critical path and compute
+    # overlaps underneath it
+    mfu = (model_flops_per_chip / TPU.peak_flops_bf16) / step_s if step_s else 0.0
+    out = {
+        **terms,
+        "dominant": dominant.replace("_s", ""),
+        "hlo_flops_per_chip": stats.flops,
+        "hlo_bytes_per_chip": stats.bytes,
+        "collective_bytes_per_chip": stats.collective_bytes,
+        "per_collective_bytes": dict(stats.per_collective),
+        "collective_op_counts": dict(stats.collective_ops),
+        "model_flops_global": model_flops_global,
+        "model_flops_per_chip": model_flops_per_chip,
+        "useful_flops_ratio": useful_ratio,
+        "roofline_mfu": mfu,
+        "step_time_bound_s": step_s,
+    }
+    if memory_stats:
+        out["memory_analysis"] = memory_stats
+    return out
+
+
+def fmt_seconds(s: float) -> str:
+    if s >= 1.0:
+        return f"{s:.2f}s"
+    if s >= 1e-3:
+        return f"{s*1e3:.2f}ms"
+    return f"{s*1e6:.1f}us"
+
+
+def summarize(record: Dict) -> str:
+    r = record["roofline"]
+    return (
+        f"{record['arch']:<24s} {record['shape']:<12s} "
+        f"{record['mesh']:<10s} {record.get('mode','-'):<10s} "
+        f"C={fmt_seconds(r['compute_s']):>9s} "
+        f"M={fmt_seconds(r['memory_s']):>9s} "
+        f"N={fmt_seconds(r['collective_s']):>9s} "
+        f"dom={r['dominant']:<10s} "
+        f"useful={r['useful_flops_ratio']*100:5.1f}% "
+        f"MFU<={r['roofline_mfu']*100:5.1f}%"
+    )

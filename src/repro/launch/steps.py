@@ -1,0 +1,202 @@
+"""Step-function builders shared by the dry-run, trainer, and server.
+
+``make_train_step``/``make_serve_step``/``make_prefill_step`` return
+(step_fn, in_shardings, out_shardings, abstract_inputs) ready for
+``jax.jit(...).lower(...)``. Tracing must happen inside
+``sharding_ctx(mesh, rules)`` so activation constraints resolve — the
+returned ``lower`` helper handles that.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.dist.sharding import (
+    ShardingRules,
+    abstract_params,
+    fit_pspec,
+    logical_to_pspec,
+    rules_for_mode,
+    sharding_ctx,
+    specs_to_shardings,
+)
+from repro.models.base import ArchConfig, ShapeSpec, build_model
+from repro.optim.optimizers import make_optimizer
+
+
+def batch_sharding(ispec: Dict[str, jax.ShapeDtypeStruct], mesh: Mesh,
+                   rules: ShardingRules):
+    """First dim of every batched input is the batch axis; scalars replicate."""
+    out = {}
+    for k, s in ispec.items():
+        if s.ndim == 0:
+            out[k] = NamedSharding(mesh, P())
+        else:
+            axes = ("batch",) + (None,) * (s.ndim - 1)
+            pspec = fit_pspec(s.shape,
+                              logical_to_pspec(axes, mesh, rules), mesh)
+            out[k] = NamedSharding(mesh, pspec)
+    return out
+
+
+@dataclasses.dataclass
+class LoweringBundle:
+    fn: Any
+    in_shardings: Any
+    out_shardings: Any
+    abstract_inputs: Tuple
+    mesh: Mesh
+    rules: ShardingRules
+    donate_argnums: Tuple[int, ...] = ()
+
+    def lower(self):
+        with self.mesh, sharding_ctx(self.mesh, self.rules):
+            jitted = jax.jit(
+                self.fn,
+                in_shardings=self.in_shardings,
+                out_shardings=self.out_shardings,
+                donate_argnums=self.donate_argnums,
+            )
+            return jitted.lower(*self.abstract_inputs)
+
+
+def make_train_step(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh,
+                    mode: Optional[str] = None) -> LoweringBundle:
+    rules = rules_for_mode(mode or cfg.sharding_mode)
+    model = build_model(cfg)
+    optimizer = make_optimizer(cfg.optimizer)
+    pspecs = model.param_specs()
+    ospecs = optimizer.state_specs(pspecs)
+    ispec = model.input_specs(shape)
+
+    nmb = max(1, cfg.microbatches)
+
+    def accum(params, batch):
+        if nmb == 1:
+            return jax.value_and_grad(model.loss)(params, batch)
+        # gradient accumulation: peak activation memory drops ~nmb-fold;
+        # the psum over data happens once on the accumulated grads
+        micro = jax.tree.map(
+            lambda x: x.reshape((nmb, x.shape[0] // nmb) + x.shape[1:])
+            if hasattr(x, "shape") and x.ndim else x, batch)
+
+        def body(carry, mb):
+            loss_acc, g_acc = carry
+            loss, g = jax.value_and_grad(model.loss)(params, mb)
+            return (loss_acc + loss,
+                    jax.tree.map(jnp.add, g_acc, g)), None
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss, grads), _ = jax.lax.scan(body, (jnp.zeros(()), zeros), micro)
+        inv = 1.0 / nmb
+        return loss * inv, jax.tree.map(lambda g: g * inv, grads)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = accum(params, batch)
+        updates, opt_state, gnorm = optimizer.update(grads, opt_state, params)
+        params = jax.tree.map(
+            lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+            params, updates,
+        )
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    param_sh = specs_to_shardings(pspecs, mesh, rules)
+    opt_sh = specs_to_shardings(ospecs, mesh, rules)
+    batch_sh = batch_sharding(ispec, mesh, rules)
+    metric_sh = {"loss": NamedSharding(mesh, P()),
+                 "grad_norm": NamedSharding(mesh, P())}
+    return LoweringBundle(
+        fn=train_step,
+        in_shardings=(param_sh, opt_sh, batch_sh),
+        out_shardings=(param_sh, opt_sh, metric_sh),
+        abstract_inputs=(abstract_params(pspecs), abstract_params(ospecs),
+                         ispec),
+        mesh=mesh,
+        rules=rules,
+        donate_argnums=(0, 1),
+    )
+
+
+def make_prefill_step(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh,
+                      mode: Optional[str] = None) -> LoweringBundle:
+    rules = rules_for_mode(mode or cfg.sharding_mode)
+    model = build_model(cfg)
+    pspecs = model.param_specs()
+    ispec = model.input_specs(shape)
+    # prefill doesn't need labels
+    ispec = {k: v for k, v in ispec.items() if k != "labels"}
+
+    def prefill_step(params, batch):
+        return model.forward(params, batch)
+
+    param_sh = specs_to_shardings(pspecs, mesh, rules)
+    batch_sh = batch_sharding(ispec, mesh, rules)
+    dec_len = ispec["tokens"].shape[1]
+    logits_sh = NamedSharding(
+        mesh,
+        fit_pspec(
+            (shape.global_batch, dec_len, cfg.vocab),
+            logical_to_pspec(("batch", "seq", "vocab"), mesh, rules), mesh),
+    )
+    return LoweringBundle(
+        fn=prefill_step,
+        in_shardings=(param_sh, batch_sh),
+        out_shardings=logits_sh,
+        abstract_inputs=(abstract_params(pspecs), ispec),
+        mesh=mesh,
+        rules=rules,
+    )
+
+
+def make_serve_step(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh,
+                    mode: Optional[str] = None) -> LoweringBundle:
+    """Decode step: one new token per sequence against resident state."""
+    rules = rules_for_mode(mode or cfg.sharding_mode)
+    model = build_model(cfg)
+    pspecs = model.param_specs()
+    sspecs = model.decode_state_specs(shape.global_batch, shape.seq_len)
+    ispec = model.input_specs(shape)
+
+    def serve_step(params, state, tokens, pos):
+        return model.decode_step(params, state, tokens, pos)
+
+    param_sh = specs_to_shardings(pspecs, mesh, rules)
+    state_sh = specs_to_shardings(sspecs, mesh, rules)
+    B = shape.global_batch
+    tok_sh = NamedSharding(
+        mesh, fit_pspec((B,), logical_to_pspec(("batch",), mesh, rules), mesh))
+    pos_sh = NamedSharding(mesh, P())
+    logits_sh = NamedSharding(
+        mesh,
+        fit_pspec((B, cfg.vocab),
+                  logical_to_pspec(("batch", "vocab"), mesh, rules), mesh),
+    )
+    return LoweringBundle(
+        fn=serve_step,
+        in_shardings=(param_sh, state_sh, tok_sh, pos_sh),
+        out_shardings=(logits_sh, state_sh),
+        abstract_inputs=(
+            abstract_params(pspecs), abstract_params(sspecs),
+            ispec["tokens"], ispec["pos"],
+        ),
+        mesh=mesh,
+        rules=rules,
+        donate_argnums=(1,),
+    )
+
+
+def make_step(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh,
+              mode: Optional[str] = None) -> LoweringBundle:
+    if shape.kind == "train":
+        return make_train_step(cfg, shape, mesh, mode)
+    if shape.kind == "prefill":
+        return make_prefill_step(cfg, shape, mesh, mode)
+    if shape.kind == "decode":
+        return make_serve_step(cfg, shape, mesh, mode)
+    raise ValueError(shape.kind)

@@ -1,0 +1,90 @@
+"""Production training launcher.
+
+On a TPU pod slice this builds the production mesh and runs the sharded
+train step from launch/steps.py; on this CPU container use --debug to run a
+reduced config on a small host mesh (the integration tests exercise the
+same path with 8 forced host devices).
+
+    PYTHONPATH=src python -m repro.launch.train --arch yi-6b --debug --steps 20
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced_config
+from repro.data.pipeline import make_train_iterator
+from repro.dist.sharding import (
+    init_params,
+    rules_for_mode,
+    sharding_ctx,
+    specs_to_shardings,
+)
+from repro.launch.mesh import make_debug_mesh, make_production_mesh
+from repro.models import SHAPES, build_model
+from repro.models.base import ShapeSpec
+from repro.optim.optimizers import make_optimizer
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k", choices=list(SHAPES))
+    ap.add_argument("--mode", default=None,
+                    choices=["cascade", "megatron", "megatron_sp"])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--debug", action="store_true",
+                    help="reduced config on a tiny local mesh")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_train")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true")
+    args = ap.parse_args()
+
+    if args.debug:
+        cfg = reduced_config(args.arch)
+        mesh = make_debug_mesh(1, 1)
+        seq, batch = 32, 4
+    else:
+        cfg = get_config(args.arch)
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+        shape = SHAPES[args.shape]
+        seq, batch = shape.seq_len, shape.global_batch
+    if args.mode:
+        cfg = cfg.with_(sharding_mode=args.mode)
+
+    rules = rules_for_mode(cfg.sharding_mode)
+    model = build_model(cfg)
+    optimizer = make_optimizer(cfg.optimizer)
+
+    with mesh, sharding_ctx(mesh, rules):
+        specs = model.param_specs()
+        params = init_params(jax.random.PRNGKey(0), specs)
+        params = jax.device_put(params,
+                                specs_to_shardings(specs, mesh, rules))
+        opt_state = optimizer.init(params)
+    n = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"{cfg.name}: {n/1e6:.1f}M params on mesh {mesh.devices.shape} "
+          f"mode={cfg.sharding_mode}")
+
+    tcfg = TrainerConfig(
+        steps=args.steps, ckpt_every=max(args.steps // 4, 1),
+        ckpt_dir=args.ckpt_dir, log_every=5,
+        microbatches=args.microbatches, compress_grads=args.compress_grads,
+    )
+    trainer = Trainer(model.loss, optimizer, tcfg, mesh=mesh, rules=rules)
+
+    def iters(start):
+        return make_train_iterator(cfg.vocab, seq, batch, seed=0,
+                                   start_step=start)
+
+    _, _, hist = trainer.fit(params, opt_state, iters)
+    print(f"done: loss {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

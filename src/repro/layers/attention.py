@@ -1,0 +1,238 @@
+"""Attention: GQA self-attention, cross-attention, and KV-cache decode.
+
+Prefill/training use a query-chunked attention (lax.scan over query blocks
+with per-chunk rematerialization) so the score matrix never materializes at
+[B,H,S,S] — the flash-attention memory behavior expressed in pure JAX. This
+is what the multi-pod dry-run lowers; a Pallas flash kernel can replace the
+inner block on real TPUs without changing the call signature.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import ParamSpec, shard_act
+from repro.layers.linear import linear, linear_spec
+from repro.layers.rope import apply_rope, rope_freqs
+
+NEG_INF = -1e30
+
+# TPU deployment switch: route the inner attention block through the Pallas
+# flash kernel (kernels/flash_attention). Off by default so the CPU dry-run
+# lowers the pure-JAX path; see EXPERIMENTS.md §Perf for the roofline delta.
+USE_FLASH_KERNEL = False
+
+
+def attention_spec(
+    d_model: int,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    mode: str,
+    *,
+    qkv_bias: bool = False,
+    stack: Optional[int] = None,
+    dtype=jnp.bfloat16,
+) -> dict:
+    return {
+        "wq": linear_spec(d_model, n_heads * head_dim, "col", mode,
+                          use_bias=qkv_bias, stack=stack, dtype=dtype),
+        "wk": linear_spec(d_model, n_kv * head_dim, "kv", mode,
+                          use_bias=qkv_bias, stack=stack, dtype=dtype),
+        "wv": linear_spec(d_model, n_kv * head_dim, "kv", mode,
+                          use_bias=qkv_bias, stack=stack, dtype=dtype),
+        "wo": linear_spec(n_heads * head_dim, d_model, "row", mode,
+                          stack=stack, dtype=dtype),
+    }
+
+
+def _attend_block(
+    q: jnp.ndarray,          # [B, Cq, H, hd]
+    k: jnp.ndarray,          # [B, Sk, H, hd]  (kv heads already repeated)
+    v: jnp.ndarray,          # [B, Sk, H, hd]
+    q_pos0,                  # scalar: global position of q[.,0]
+    kv_valid: Optional[jnp.ndarray],  # [B, Sk] bool or None
+    causal: bool,
+    scale: float,
+) -> jnp.ndarray:
+    scores = jnp.einsum(
+        "bqhd,bshd->bhqs", q, k, preferred_element_type=jnp.float32
+    ) * scale
+    Sq, Sk = q.shape[1], k.shape[1]
+    if causal:
+        qi = q_pos0 + jnp.arange(Sq)
+        si = jnp.arange(Sk)
+        mask = si[None, :] <= qi[:, None]          # [Sq, Sk]
+        scores = jnp.where(mask[None, None], scores, NEG_INF)
+    if kv_valid is not None:
+        scores = jnp.where(kv_valid[:, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum(
+        "bhqs,bshd->bqhd", p.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    )
+    return out.astype(v.dtype)
+
+
+def mha(
+    q: jnp.ndarray,          # [B, Sq, H, hd]
+    k: jnp.ndarray,          # [B, Sk, KV, hd]
+    v: jnp.ndarray,          # [B, Sk, KV, hd]
+    *,
+    causal: bool = True,
+    q_start: int | jnp.ndarray = 0,
+    kv_valid: Optional[jnp.ndarray] = None,
+    q_chunk: int = 1024,
+) -> jnp.ndarray:
+    """Grouped-query attention with query chunking.
+
+    GQA is computed in HEAD-REPEAT form: kv heads are broadcast up to the
+    full H so every tensor keeps the q-head dim intact. The obvious
+    alternative — reshaping q to [B,S,KV,G,hd] — silently BREAKS head
+    sharding under GSPMD when neither KV nor G divides the model axis
+    (e.g. 96 heads = 8 kv x 12 groups on TP=16), replicating the whole
+    score computation on every model shard. Measured on
+    mistral-large x train_4k this inflated per-device attention traffic
+    ~16x; see EXPERIMENTS.md §Perf iteration 1.
+    """
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    assert H % KV == 0, (H, KV)
+    G = H // KV
+    scale = hd**-0.5
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)               # [B, Sk, H, hd]
+        v = jnp.repeat(v, G, axis=2)
+    # seq first: a seq-sharded KV cache (flash-decoding layout, megatron_sp)
+    # takes precedence over head sharding; fit_pspec drops the duplicate.
+    k = shard_act(k, "batch", "seq", "act_heads", None)
+    v = shard_act(v, "batch", "seq", "act_heads", None)
+
+    if USE_FLASH_KERNEL and kv_valid is None and Sq == k.shape[1] \
+            and hd % 8 == 0:
+        from repro.kernels.flash_attention import flash_attention
+
+        qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, hd)
+        kf = k.transpose(0, 2, 1, 3).reshape(B * H, -1, hd)
+        vf = v.transpose(0, 2, 1, 3).reshape(B * H, -1, hd)
+        o = flash_attention(qf, kf, vf, causal=causal, q_start=int(q_start)
+                            if not hasattr(q_start, "shape") else 0)
+        return o.reshape(B, H, Sq, hd).transpose(0, 2, 1, 3)
+
+    if Sq <= q_chunk or Sq % q_chunk:
+        return _attend_block(q, k, v, q_start, kv_valid, causal, scale)
+
+    n_chunks = Sq // q_chunk
+    qc = q.reshape(B, n_chunks, q_chunk, H, hd).transpose(1, 0, 2, 3, 4)
+
+    @jax.checkpoint
+    def step(_, args):
+        qblk, idx = args
+        o = _attend_block(
+            qblk, k, v, q_start + idx * q_chunk, kv_valid, causal, scale
+        )
+        return None, o
+
+    _, outs = jax.lax.scan(step, None, (qc, jnp.arange(n_chunks)))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, hd)
+
+
+def self_attention(
+    params: dict,
+    x: jnp.ndarray,              # [B, S, d]
+    positions: jnp.ndarray,      # [B, S]
+    *,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    rope_theta: float = 10000.0,
+    causal: bool = True,
+    q_chunk: int = 1024,
+) -> jnp.ndarray:
+    B, S, _ = x.shape
+    q = linear(params["wq"], x).reshape(B, S, n_heads, head_dim)
+    k = linear(params["wk"], x).reshape(B, S, n_kv, head_dim)
+    v = linear(params["wv"], x).reshape(B, S, n_kv, head_dim)
+    inv_freq = rope_freqs(head_dim, rope_theta)
+    q = apply_rope(q, positions, inv_freq)
+    k = apply_rope(k, positions, inv_freq)
+    q = shard_act(q, "batch", "seq", "act_heads", None)
+    o = mha(q, k, v, causal=causal, q_chunk=q_chunk)
+    o = shard_act(o, "batch", "seq", "act_heads", None)
+    return linear(params["wo"], o.reshape(B, S, n_heads * head_dim))
+
+
+def cross_attention(
+    params: dict,
+    x: jnp.ndarray,              # [B, Sq, d]
+    memory: jnp.ndarray,         # [B, Sm, d_mem] (encoder / vision states)
+    *,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    memory_valid: Optional[jnp.ndarray] = None,
+    q_chunk: int = 1024,
+) -> jnp.ndarray:
+    B, Sq, _ = x.shape
+    Sm = memory.shape[1]
+    q = linear(params["wq"], x).reshape(B, Sq, n_heads, head_dim)
+    k = linear(params["wk"], memory).reshape(B, Sm, n_kv, head_dim)
+    v = linear(params["wv"], memory).reshape(B, Sm, n_kv, head_dim)
+    q = shard_act(q, "batch", "seq", "act_heads", None)
+    o = mha(q, k, v, causal=False, kv_valid=memory_valid, q_chunk=q_chunk)
+    return linear(params["wo"], o.reshape(B, Sq, n_heads * head_dim))
+
+
+# ---------------------------------------------------------------------------
+# KV-cache decode (the paper's GEMV regime: one token, resident state)
+# ---------------------------------------------------------------------------
+
+
+def init_cache_spec(
+    batch: int, max_len: int, n_kv: int, head_dim: int, n_layers: int,
+    dtype=jnp.bfloat16,
+) -> dict:
+    axes = ("layers", "batch", "seq", "cache_heads", "cache_hd")
+    shape = (n_layers, batch, max_len, n_kv, head_dim)
+    return {
+        "k": ParamSpec(shape, axes, dtype, init="zeros"),
+        "v": ParamSpec(shape, axes, dtype, init="zeros"),
+    }
+
+
+def decode_self_attention(
+    params: dict,
+    x: jnp.ndarray,              # [B, 1, d] current token hidden
+    cache_k: jnp.ndarray,        # [B, S, KV, hd] this layer's cache
+    cache_v: jnp.ndarray,
+    pos: jnp.ndarray,            # [] int32: index of the new token
+    *,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    rope_theta: float = 10000.0,
+):
+    """One decode step: project, rotate, append to cache, attend over cache.
+
+    Returns (out [B,1,d], new_cache_k, new_cache_v).
+    """
+    B = x.shape[0]
+    S = cache_k.shape[1]
+    q = linear(params["wq"], x).reshape(B, 1, n_heads, head_dim)
+    k = linear(params["wk"], x).reshape(B, 1, n_kv, head_dim)
+    v = linear(params["wv"], x).reshape(B, 1, n_kv, head_dim)
+    posb = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+    inv_freq = rope_freqs(head_dim, rope_theta)
+    q = apply_rope(q, posb, inv_freq)
+    k = apply_rope(k, posb, inv_freq)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k, pos, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v, pos, axis=1)
+    kv_valid = (jnp.arange(S)[None, :] <= pos).astype(bool)
+    kv_valid = jnp.broadcast_to(kv_valid, (B, S))
+    o = mha(q, cache_k, cache_v, causal=False, kv_valid=kv_valid)
+    out = linear(params["wo"], o.reshape(B, 1, n_heads * head_dim))
+    return out, cache_k, cache_v

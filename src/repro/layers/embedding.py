@@ -1,0 +1,34 @@
+"""Token embedding and (vocab-sharded) LM head."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.dist.sharding import ParamSpec, shard_act
+
+
+def embedding_spec(vocab: int, d_model: int, dtype=jnp.bfloat16) -> dict:
+    return {
+        "table": ParamSpec((vocab, d_model), ("vocab", "embed"), dtype,
+                           init="embed"),
+    }
+
+
+def embed(params: dict, tokens: jnp.ndarray) -> jnp.ndarray:
+    x = jnp.take(params["table"], tokens, axis=0)
+    return shard_act(x, "batch", "seq", "act_embed")
+
+
+def lm_head_spec(d_model: int, vocab: int, dtype=jnp.bfloat16) -> dict:
+    return {
+        "w": ParamSpec((d_model, vocab), ("embed", "vocab"), dtype,
+                       init="normal"),
+    }
+
+
+def lm_head(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    logits = jnp.einsum("...d,dv->...v", x, params["w"],
+                        preferred_element_type=jnp.float32)
+    return shard_act(logits, "batch", "seq", "vocab")

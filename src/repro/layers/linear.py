@@ -1,0 +1,121 @@
+"""Dense layers with cascade / megatron sharding roles.
+
+The paper's layer-parallelism decomposition becomes the choice of logical
+axes on the weight:
+
+  * ``cascade`` mode (paper-faithful): every weight's *contraction* dim maps
+    to the model axis ("cascade_in" -> model) — the west->east cascade
+    reduction becomes a psum per linear. The non-contracted dim carries FSDP
+    ("cascade_out" -> data).
+  * ``megatron`` mode: role "col" shards the output dim on model, role "row"
+    shards the input dim — one psum per col+row pair.
+
+An optional int8-quantized path routes through the Pallas qmatmul kernel
+(TPU deployment; the pure-JAX path is what the CPU dry-run lowers).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.dist.sharding import ParamSpec
+
+
+def linear_axes(role: str, mode: str):
+    """Logical axes of a (d_in, d_out) weight for a sharding mode."""
+    if mode == "cascade":
+        return ("cascade_in", "cascade_out")
+    table = {
+        "col": ("fsdp", "col_out"),
+        "row": ("row_in", "fsdp"),
+        "replicated": (None, None),
+        "kv": ("fsdp", None),  # GQA kv projection: kv_heads < TP, replicate
+    }
+    return table[role]
+
+
+def bias_axes(role: str, mode: str):
+    if mode == "cascade":
+        return ("cascade_out",)
+    return {
+        "col": ("col_out",),
+        "row": (None,),
+        "replicated": (None,),
+        "kv": (None,),
+    }[role]
+
+
+def linear_spec(
+    d_in: int,
+    d_out: int,
+    role: str,
+    mode: str,
+    *,
+    use_bias: bool = False,
+    dtype=jnp.bfloat16,
+    stack: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> dict:
+    """ParamSpec dict for one linear; ``stack`` prepends a scan-layer dim."""
+    w_axes = linear_axes(role, mode)
+    w_shape = (d_in, d_out)
+    if stack is not None:
+        w_shape = (stack,) + w_shape
+        w_axes = ("layers",) + w_axes
+    out = {"w": ParamSpec(w_shape, w_axes, dtype, init="normal", scale=scale)}
+    if use_bias:
+        b_axes = bias_axes(role, mode)
+        b_shape = (d_out,)
+        if stack is not None:
+            b_shape = (stack,) + b_shape
+            b_axes = ("layers",) + b_axes
+        out["b"] = ParamSpec(b_shape, b_axes, dtype, init="zeros")
+    return out
+
+
+def linear(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """y = x @ w (+ b). bf16 inputs, fp32 accumulation, bf16 out."""
+    y = jnp.einsum(
+        "...d,df->...f", x, params["w"],
+        preferred_element_type=jnp.float32,
+    )
+    if "b" in params:
+        y = y + params["b"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def quantized_linear(
+    params: dict,
+    x: jnp.ndarray,
+    *,
+    x_shift: int = 7,
+    w_shift: int = 7,
+    out_shift: int = 7,
+    relu: bool = False,
+):
+    """Paper-faithful int8 path: quantize, run the fused Pallas kernel,
+    dequantize. Used by the serving configs on TPU (interpret-mode on CPU).
+    """
+    from repro.kernels.qmatmul.ops import qlinear  # lazy: pallas import
+    from repro.quant.srs import INT_RANGE
+
+    lo, hi = INT_RANGE["int8"]
+    xq = jnp.clip(jnp.round(x.astype(jnp.float32) * (2.0**x_shift)), lo, hi)
+    xq = xq.astype(jnp.int8)
+    wq = jnp.clip(
+        jnp.round(params["w"].astype(jnp.float32) * (2.0**w_shift)), lo, hi
+    ).astype(jnp.int8)
+    bq = None
+    if "b" in params:
+        bq = jnp.round(
+            params["b"].astype(jnp.float32) * (2.0 ** (x_shift + w_shift))
+        ).astype(jnp.int32)
+    lead = xq.shape[:-1]
+    y = qlinear(
+        xq.reshape(-1, xq.shape[-1]), wq, bq,
+        shift=x_shift + w_shift - out_shift, relu=relu, out_dtype="int8",
+    )
+    y = y.reshape(*lead, y.shape[-1])
+    return y.astype(x.dtype) * (2.0**-out_shift)

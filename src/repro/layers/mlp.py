@@ -1,0 +1,46 @@
+"""Feed-forward blocks: SwiGLU (llama family) and classic GELU/ReLU MLP."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard_act
+from repro.layers.linear import linear, linear_spec
+
+
+def swiglu_spec(d_model: int, d_ff: int, mode: str, *, stack=None,
+                dtype=jnp.bfloat16) -> dict:
+    return {
+        "gate": linear_spec(d_model, d_ff, "col", mode, stack=stack, dtype=dtype),
+        "up": linear_spec(d_model, d_ff, "col", mode, stack=stack, dtype=dtype),
+        "down": linear_spec(d_ff, d_model, "row", mode, stack=stack, dtype=dtype),
+    }
+
+
+def swiglu(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    g = linear(params["gate"], x)
+    u = linear(params["up"], x)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    h = shard_act(h, "batch", "seq", "act_mlp")
+    return linear(params["down"], h)
+
+
+def mlp_spec(d_model: int, d_ff: int, mode: str, *, stack=None,
+             use_bias: bool = True, dtype=jnp.bfloat16) -> dict:
+    return {
+        "up": linear_spec(d_model, d_ff, "col", mode, stack=stack,
+                          use_bias=use_bias, dtype=dtype),
+        "down": linear_spec(d_ff, d_model, "row", mode, stack=stack,
+                            use_bias=use_bias, dtype=dtype),
+    }
+
+
+def mlp(params: dict, x: jnp.ndarray, act: str = "gelu") -> jnp.ndarray:
+    h = linear(params["up"], x)
+    hf = h.astype(jnp.float32)
+    hf = jax.nn.gelu(hf) if act == "gelu" else jax.nn.relu(hf)
+    h = shard_act(hf.astype(x.dtype), "batch", "seq", "act_mlp")
+    return linear(params["down"], h)

@@ -1,0 +1,245 @@
+"""Mixture-of-Experts with sort-based dispatch and expert parallelism.
+
+Experts shard over the model axis (EP) with FSDP on the weight dims; token
+dispatch uses the sort + capacity formulation (argsort by expert id, fixed
+per-expert capacity, overflow dropped) so the dispatch tensors stay
+O(E * C * d) instead of the one-hot O(T * E * C). Expert activations carry
+explicit sharding constraints P(experts=model, capacity=data) so the
+partitioner materializes the token redistribution as an a2a-style reshard
+between the data and model axes — the memory-tile "re-tiling between layers"
+role at pod scale.
+
+Routing math follows Mixtral/Phi-3.5: softmax router, top-k, renormalized
+gates, plus the switch-style load-balance auxiliary loss.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import ParamSpec, shard_act
+
+
+def moe_spec(
+    d_model: int,
+    d_ff: int,
+    n_experts: int,
+    mode: str,
+    *,
+    gated: bool = True,
+    stack: Optional[int] = None,
+    dtype=jnp.bfloat16,
+) -> dict:
+    def _w(shape, axes):
+        if stack is not None:
+            shape = (stack,) + shape
+            axes = ("layers",) + axes
+        return ParamSpec(shape, axes, dtype, init="normal",
+                         scale=1.0 / (shape[-2] ** 0.5))
+
+    spec = {
+        "router": _w((d_model, n_experts), (None, None)),
+        "w_up": _w((n_experts, d_model, d_ff), ("experts", "fsdp", None)),
+        "w_down": _w((n_experts, d_ff, d_model), ("experts", "fsdp", None)),
+    }
+    if gated:
+        spec["w_gate"] = _w((n_experts, d_model, d_ff),
+                            ("experts", "fsdp", None))
+    return spec
+
+
+def _capacity(n_tokens: int, top_k: int, n_experts: int,
+              capacity_factor: float) -> int:
+    c = int(-(-n_tokens * top_k * capacity_factor // n_experts))
+    return max(8, -(-c // 8) * 8)  # pad to a multiple of 8 lanes
+
+
+def _expert_ffn(params, xe, gate, x_dtype, gated, act):
+    """Batched expert FFN over [..., E, C, d] dispatch buffers.
+
+    Dots are written as bf16 x bf16 with fp32 accumulation via an explicit
+    operand convert (XLA fuses the convert into the MXU dot on TPU; the CPU
+    eager path needs it spelled out).
+    """
+    def dot(a, w, eq):
+        return jnp.einsum(eq, a, w.astype(jnp.float32),
+                          preferred_element_type=jnp.float32)
+
+    xef = xe.astype(jnp.float32)
+    if gated:
+        g = dot(xef, params["w_gate"], "...ecd,edf->...ecf")
+        u = dot(xef, params["w_up"], "...ecd,edf->...ecf")
+        h = (jax.nn.silu(g) * u).astype(x_dtype)
+    else:
+        h = dot(xef, params["w_up"], "...ecd,edf->...ecf")
+        h = (jax.nn.gelu(h) if act == "gelu" else jax.nn.relu(h)).astype(
+            x_dtype)
+    ye = dot(h.astype(jnp.float32), params["w_down"], "...ecf,efd->...ecd")
+    return ye * gate[..., None]
+
+
+def moe_grouped(
+    params: dict,
+    x: jnp.ndarray,                  # [B, S, d]
+    *,
+    n_experts: int,
+    top_k: int,
+    n_groups: int,
+    capacity_factor: float = 1.25,
+    gated: bool = True,
+    act: str = "silu",
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Group-limited dispatch (beyond-paper optimization, §Perf iter 3).
+
+    Tokens split into ``n_groups`` groups aligned with the data axis; each
+    group routes, sorts, gathers and combines LOCALLY (per-group capacity),
+    so the only cross-device traffic is the expert-weight FSDP gather and
+    one psum of the combined outputs over the model axis — the global-sort
+    formulation's all-gather of every token vanishes. Same routing math as
+    GShard/Switch groups.
+    """
+    B, S, d = x.shape
+    T = B * S
+    assert T % n_groups == 0
+    Tg = T // n_groups
+    xf = x.reshape(n_groups, Tg, d)
+    xf = shard_act(xf, "batch", None, None)
+
+    logits = jnp.einsum("gtd,de->gte", xf.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                    # [G,Tg,E]
+    gate_vals, expert_ids = jax.lax.top_k(probs, top_k)        # [G,Tg,k]
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(jax.nn.one_hot(expert_ids, n_experts,
+                                 dtype=jnp.float32), axis=(0, 1, 2))
+    aux = n_experts * jnp.sum(me * ce)
+
+    C = _capacity(Tg, top_k, n_experts, capacity_factor)
+    flat_e = expert_ids.reshape(n_groups, Tg * top_k)
+    order = jnp.argsort(flat_e, axis=-1)                       # [G,Tk]
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=-1)
+    starts = jax.vmap(
+        lambda se: jnp.searchsorted(se, jnp.arange(n_experts)))(sorted_e)
+    slots = starts[:, :, None] + jnp.arange(C)[None, None, :]  # [G,E,C]
+    in_range = slots < Tg * top_k
+    slots_c = jnp.minimum(slots, Tg * top_k - 1)
+    e_at = jnp.take_along_axis(
+        sorted_e, slots_c.reshape(n_groups, -1), axis=-1
+    ).reshape(n_groups, n_experts, C)
+    valid = in_range & (e_at == jnp.arange(n_experts)[None, :, None])
+    pair = jnp.take_along_axis(
+        order, slots_c.reshape(n_groups, -1), axis=-1
+    ).reshape(n_groups, n_experts, C)
+    tok = pair // top_k                                        # [G,E,C]
+    kk = pair % top_k
+    gate = jnp.where(
+        valid,
+        jnp.take_along_axis(
+            gate_vals.reshape(n_groups, -1),
+            (tok * top_k + kk).reshape(n_groups, -1), axis=-1
+        ).reshape(n_groups, n_experts, C),
+        0.0,
+    )
+
+    xe = jnp.take_along_axis(
+        xf, tok.reshape(n_groups, -1)[..., None], axis=1
+    ).reshape(n_groups, n_experts, C, d)
+    xe = jnp.where(valid[..., None], xe, 0)
+    xe = shard_act(xe, "batch", "experts", None, None)
+
+    ye = _expert_ffn(params, xe, gate, x.dtype, gated, act)    # [G,E,C,d]
+
+    def combine(ye_g, tok_g):
+        return jnp.zeros((Tg, d), jnp.float32).at[
+            tok_g.reshape(-1)].add(ye_g.reshape(-1, d))
+
+    y = jax.vmap(combine)(ye, tok)                             # [G,Tg,d]
+    y = y.reshape(B, S, d).astype(x.dtype)
+    y = shard_act(y, "batch", "seq", "act_embed")
+    return y, aux
+
+
+def moe(
+    params: dict,
+    x: jnp.ndarray,                  # [B, S, d]
+    *,
+    n_experts: int,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    gated: bool = True,
+    act: str = "silu",
+    n_groups: int = 1,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (output [B,S,d], aux load-balance loss scalar)."""
+    if n_groups > 1 and (x.shape[0] * x.shape[1]) % n_groups == 0 \
+            and (x.shape[0] * x.shape[1]) // n_groups >= top_k:
+        return moe_grouped(
+            params, x, n_experts=n_experts, top_k=top_k, n_groups=n_groups,
+            capacity_factor=capacity_factor, gated=gated, act=act)
+    B, S, d = x.shape
+    T = B * S
+    xf = x.reshape(T, d)
+
+    # ---- routing (fp32) ----
+    logits = jnp.einsum(
+        "td,de->te", xf.astype(jnp.float32),
+        params["router"].astype(jnp.float32),
+    )
+    probs = jax.nn.softmax(logits, axis=-1)                   # [T, E]
+    gate_vals, expert_ids = jax.lax.top_k(probs, top_k)       # [T, k]
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    # switch-style aux loss (fraction of tokens vs fraction of prob mass)
+    me = jnp.mean(probs, axis=0)                              # [E]
+    ce = jnp.mean(
+        jax.nn.one_hot(expert_ids, n_experts, dtype=jnp.float32), axis=(0, 1)
+    )
+    aux = n_experts * jnp.sum(me * ce)
+
+    # ---- sort-based dispatch with capacity ----
+    C = _capacity(T, top_k, n_experts, capacity_factor)
+    flat_e = expert_ids.reshape(-1)                           # [T*k]
+    order = jnp.argsort(flat_e)                               # stable
+    sorted_e = flat_e[order]
+    starts = jnp.searchsorted(sorted_e, jnp.arange(n_experts))  # [E]
+    slots = starts[:, None] + jnp.arange(C)[None, :]          # [E, C]
+    in_range = slots < T * top_k
+    slots_c = jnp.minimum(slots, T * top_k - 1)
+    valid = in_range & (sorted_e[slots_c] == jnp.arange(n_experts)[:, None])
+    pair = order[slots_c]                                     # [E, C]
+    tok = pair // top_k
+    kk = pair % top_k
+    gate = jnp.where(valid, gate_vals[tok, kk], 0.0)          # [E, C] fp32
+
+    xe = jnp.take(xf, tok.reshape(-1), axis=0).reshape(n_experts, C, d)
+    xe = jnp.where(valid[..., None], xe, 0)
+    # EP redistribution point: experts on the model axis, capacity on data
+    xe = shard_act(xe, "experts", "expert_cap", None)
+
+    # ---- expert FFN (batched over the expert dim) ----
+    if gated:
+        g = jnp.einsum("ecd,edf->ecf", xe, params["w_gate"],
+                       preferred_element_type=jnp.float32)
+        u = jnp.einsum("ecd,edf->ecf", xe, params["w_up"],
+                       preferred_element_type=jnp.float32)
+        h = (jax.nn.silu(g) * u).astype(x.dtype)
+    else:
+        h = jnp.einsum("ecd,edf->ecf", xe, params["w_up"],
+                       preferred_element_type=jnp.float32)
+        h = (jax.nn.gelu(h) if act == "gelu" else jax.nn.relu(h)).astype(x.dtype)
+    h = shard_act(h, "experts", "expert_cap", None)
+    ye = jnp.einsum("ecf,efd->ecd", h, params["w_down"],
+                    preferred_element_type=jnp.float32)       # [E, C, d] fp32
+    ye = ye * gate[..., None]
+
+    # ---- combine (scatter-add back to token order) ----
+    y = jnp.zeros((T, d), jnp.float32)
+    y = y.at[tok.reshape(-1)].add(ye.reshape(n_experts * C, d))
+    y = y.reshape(B, S, d).astype(x.dtype)
+    y = shard_act(y, "batch", "seq", "act_embed")
+    return y, aux

@@ -1,0 +1,48 @@
+"""Normalization layers (fp32 internal math, bf16 storage)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import ParamSpec
+
+
+def rmsnorm_spec(d: int, dtype=jnp.bfloat16) -> dict:
+    return {"scale": ParamSpec((d,), (None,), dtype, init="ones")}
+
+
+def rmsnorm(params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_spec(d: int, dtype=jnp.bfloat16) -> dict:
+    return {
+        "scale": ParamSpec((d,), (None,), dtype, init="ones"),
+        "bias": ParamSpec((d,), (None,), dtype, init="zeros"),
+    }
+
+
+def layernorm(params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def groupnorm_heads(x: jnp.ndarray, scale, bias, eps: float = 64e-5):
+    """Per-head group norm over the last dim (RWKV wkv output norm).
+
+    x: [..., H, D]; scale/bias: [H, D].
+    """
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return y.astype(x.dtype)

@@ -1,0 +1,24 @@
+"""Rotary position embeddings (rotate-half convention)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    """Inverse frequencies [head_dim // 2], fp32."""
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta**exponents)
+
+
+def apply_rope(
+    x: jnp.ndarray,            # [B, S, H, hd]
+    positions: jnp.ndarray,    # [B, S] int32
+    inv_freq: jnp.ndarray,     # [hd // 2]
+) -> jnp.ndarray:
+    angles = positions[..., None].astype(jnp.float32) * inv_freq  # [B,S,hd/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,234 @@
+"""Mamba2 selective state-space layer (SSD chunked algorithm).
+
+Training/prefill use the chunked SSD formulation (Dao & Gu 2024, "minimal
+SSD"): the sequence splits into chunks; within-chunk interactions are a
+masked-decay matmul (MXU-friendly), and cross-chunk state flows through a
+short lax.scan over chunk states — O(L) work, all in matmuls, no O(L)
+sequential scan. Decode is the O(1) recurrent state update, which is the
+paper's GEMV regime (state resident, one token in).
+
+Simplifications vs the reference CUDA implementation (documented in
+DESIGN.md): ngroups=1 (B/C shared across heads), causal conv applied to the
+x-branch only.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import ParamSpec, shard_act
+from repro.layers.linear import linear_spec, linear
+from repro.layers.norm import rmsnorm
+
+
+def mamba2_spec(
+    d_model: int,
+    *,
+    expand: int = 2,
+    head_dim: int = 64,
+    d_state: int = 64,
+    d_conv: int = 4,
+    mode: str = "megatron",
+    stack: Optional[int] = None,
+    dtype=jnp.bfloat16,
+) -> dict:
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+
+    def _p(shape, axes, init="normal", scale=None):
+        if stack is not None:
+            shape = (stack,) + shape
+            axes = ("layers",) + axes
+        return ParamSpec(shape, axes, dtype, init=init, scale=scale)
+
+    return {
+        "wz": linear_spec(d_model, d_inner, "col", mode, stack=stack, dtype=dtype),
+        "wx": linear_spec(d_model, d_inner, "col", mode, stack=stack, dtype=dtype),
+        "wBC": linear_spec(d_model, 2 * d_state, "replicated", mode,
+                           stack=stack, dtype=dtype),
+        "wdt": linear_spec(d_model, n_heads, "replicated", mode,
+                           stack=stack, dtype=dtype),
+        "conv_w": _p((d_conv, d_inner), ("conv_k", "mlp")),
+        "conv_b": _p((d_inner,), ("mlp",), init="zeros"),
+        "dt_bias": _p((n_heads,), (None,), init="zeros"),
+        "A_log": _p((n_heads,), (None,), init="zeros"),
+        "D": _p((n_heads,), (None,), init="ones"),
+        "norm_scale": _p((d_inner,), ("mlp",), init="ones"),
+        "out": linear_spec(d_inner, d_model, "row", mode, stack=stack, dtype=dtype),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv over seq. x [B,L,D], w [K,D]. If ``state``
+    ([B,K-1,D], trailing context) is given, returns (y, new_state)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)          # [B, L+K-1, D]
+    y = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(K)
+    )
+    y = y + b[None, None, :]
+    new_state = xp[:, -(K - 1):, :]
+    return jax.nn.silu(y.astype(jnp.float32)).astype(x.dtype), new_state
+
+
+def _segsum(a: jnp.ndarray) -> jnp.ndarray:
+    """[..., L] -> [..., L, L] lower-triangular segment sums
+    (out[i,j] = sum a[j+1..i], -inf above diagonal)."""
+    L = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jnp.ndarray,     # [B, L, H, P] (dt already folded in)
+    dA: jnp.ndarray,    # [B, L, H]   per-step log decay (dt * A, negative)
+    Bmat: jnp.ndarray,  # [B, L, N]
+    Cmat: jnp.ndarray,  # [B, L, N]
+    chunk: int = 128,
+    init_state: Optional[jnp.ndarray] = None,  # [B, H, P, N]
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD: y[t] = C_t . h_t, h_t = exp(dA_t) h_{t-1} + B_t x_t."""
+    B, L, H, P = x.shape
+    N = Bmat.shape[-1]
+    if L % chunk:
+        chunk = L  # degenerate small-seq case
+    nC = L // chunk
+    xc = x.reshape(B, nC, chunk, H, P).astype(jnp.float32)
+    dAc = dA.reshape(B, nC, chunk, H).transpose(0, 3, 1, 2)  # [B,H,C,Lc]
+    dAc = dAc.astype(jnp.float32)
+    Bc = Bmat.reshape(B, nC, chunk, N).astype(jnp.float32)
+    Cc = Cmat.reshape(B, nC, chunk, N).astype(jnp.float32)
+
+    Acs = jnp.cumsum(dAc, axis=-1)                            # [B,H,C,Lc]
+    Lmat = jnp.exp(_segsum(dAc))                              # [B,H,C,Lc,Lc]
+
+    # intra-chunk (diagonal blocks)
+    y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp", Cc, Bc, Lmat, xc)
+
+    # per-chunk final states ('bchpn' order: [B, C, H, P, N])
+    decay_states = jnp.exp(Acs[..., -1:] - Acs)               # [B,H,C,Lc]
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn", Bc, decay_states, xc)
+
+    # inter-chunk recurrence (scan over chunk index)
+    chunk_decay = jnp.exp(Acs[..., -1])                       # [B,H,C]
+    if init_state is None:
+        s0 = jnp.zeros((B, H, P, N), jnp.float32)
+    else:
+        s0 = init_state.astype(jnp.float32)
+
+    def step(s, inp):
+        st, dec = inp                                         # [B,H,P,N],[B,H]
+        prev = s
+        s = prev * dec[..., None, None] + st
+        return s, prev
+
+    states_t = states.transpose(1, 0, 2, 3, 4)                # [C,B,H,P,N]
+    decay_t = chunk_decay.transpose(2, 0, 1)                  # [C,B,H]
+    final, prev_states = jax.lax.scan(step, s0, (states_t, decay_t))
+    prev_states = prev_states.transpose(1, 2, 0, 3, 4)        # [B,H,C,P,N]
+
+    # inter-chunk contribution
+    y_off = jnp.einsum(
+        "bcln,bhcpn,bhcl->bclhp", Cc, prev_states, jnp.exp(Acs),
+    )
+    y = (y_diag + y_off).reshape(B, L, H, P)
+    return y, final
+
+
+def mamba2(
+    params: dict,
+    x: jnp.ndarray,             # [B, L, d_model]
+    *,
+    head_dim: int = 64,
+    d_state: int = 64,
+    chunk: int = 128,
+) -> jnp.ndarray:
+    """Full Mamba2 block (training / prefill path)."""
+    B, L, D = x.shape
+    z = linear(params["wz"], x)                       # [B,L,d_inner]
+    xi = linear(params["wx"], x)
+    d_inner = xi.shape[-1]
+    H = d_inner // head_dim
+    xi, _ = _causal_conv(xi, params["conv_w"], params["conv_b"])
+    xi = shard_act(xi, "batch", "seq", "act_mlp")
+    BC = linear(params["wBC"], x).astype(jnp.float32)
+    Bmat, Cmat = jnp.split(BC, 2, axis=-1)
+    dt = jax.nn.softplus(
+        linear(params["wdt"], x).astype(jnp.float32)
+        + params["dt_bias"].astype(jnp.float32)
+    )                                                  # [B,L,H]
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))  # [H]
+    xh = xi.reshape(B, L, H, head_dim)
+    xdt = xh.astype(jnp.float32) * dt[..., None]
+    dA = dt * A[None, None, :]
+    y, _ = ssd_chunked(xdt, dA, Bmat, Cmat, chunk=chunk)
+    y = y + params["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(
+        jnp.float32
+    )
+    y = y.reshape(B, L, d_inner).astype(x.dtype)
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rmsnorm({"scale": params["norm_scale"]}, y)
+    return linear(params["out"], y)
+
+
+def mamba2_state_spec(batch: int, n_layers: int, d_inner: int,
+                      head_dim: int, d_state: int, d_conv: int = 4,
+                      dtype=jnp.float32) -> dict:
+    H = d_inner // head_dim
+    return {
+        "ssm": ParamSpec((n_layers, batch, H, head_dim, d_state),
+                         ("layers", "batch", "mlp", None, None),
+                         dtype, init="zeros"),
+        "conv": ParamSpec((n_layers, batch, d_conv - 1, d_inner),
+                          ("layers", "batch", None, "act_mlp"),
+                          dtype, init="zeros"),
+    }
+
+
+def mamba2_decode(
+    params: dict,
+    x: jnp.ndarray,             # [B, 1, d_model]
+    ssm_state: jnp.ndarray,     # [B, H, P, N] fp32
+    conv_state: jnp.ndarray,    # [B, K-1, d_inner]
+    *,
+    head_dim: int = 64,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One recurrent decode step. Returns (y, new_ssm_state, new_conv_state)."""
+    B = x.shape[0]
+    z = linear(params["wz"], x)
+    xi = linear(params["wx"], x)
+    d_inner = xi.shape[-1]
+    H = d_inner // head_dim
+    xi, conv_state = _causal_conv(
+        xi, params["conv_w"], params["conv_b"], state=conv_state.astype(x.dtype)
+    )
+    BC = linear(params["wBC"], x).astype(jnp.float32)
+    Bmat, Cmat = jnp.split(BC, 2, axis=-1)            # [B,1,N]
+    dt = jax.nn.softplus(
+        linear(params["wdt"], x).astype(jnp.float32)
+        + params["dt_bias"].astype(jnp.float32)
+    )[:, 0]                                            # [B,H]
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    xh = xi.reshape(B, H, head_dim).astype(jnp.float32)
+    dA = jnp.exp(dt * A[None, :])                      # [B,H]
+    new_state = (
+        ssm_state.astype(jnp.float32) * dA[..., None, None]
+        + jnp.einsum("bhp,bn->bhpn", xh * dt[..., None], Bmat[:, 0])
+    )
+    y = jnp.einsum("bhpn,bn->bhp", new_state, Cmat[:, 0])
+    y = y + params["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(B, 1, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rmsnorm({"scale": params["norm_scale"]}, y)
+    return linear(params["out"], y), new_state, conv_state.astype(jnp.float32)

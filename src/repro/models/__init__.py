@@ -1,0 +1,9 @@
+from repro.models.base import (
+    ArchConfig,
+    ShapeSpec,
+    SHAPES,
+    build_model,
+    supports_shape,
+)
+
+__all__ = ["ArchConfig", "ShapeSpec", "SHAPES", "build_model", "supports_shape"]

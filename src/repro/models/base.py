@@ -1,0 +1,168 @@
+"""Model API shared by all assigned architectures.
+
+Every architecture is an ``ArchConfig`` (exact configs live in
+``repro/configs/<id>.py``) consumed by a family-specific model class built
+via :func:`build_model`. All models expose:
+
+  * ``param_specs()``                 -> ParamSpec pytree
+  * ``loss(params, batch)``           -> scalar (training objective)
+  * ``forward(params, batch)``        -> logits (prefill entry point)
+  * ``decode_state_specs(batch, S)``  -> ParamSpec pytree (KV cache / SSM state)
+  * ``decode_step(params, state, tokens, pos)`` -> (logits, state)
+  * ``input_specs(shape_name)``       -> ShapeDtypeStruct stand-ins (dry-run)
+
+Modality frontends are stubs per the assignment: the vision/audio entries
+take precomputed patch/frame embeddings as inputs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import ParamSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                 # dense | moe | vlm | encdec | ssm | hybrid
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 128
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    # moe
+    n_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    n_shared_experts: int = 0
+    moe_groups: int = 0          # >1: group-limited dispatch (§Perf iter 3)
+    # vlm (llama-3.2-vision): one cross-attn layer per `cross_attn_every`
+    cross_attn_every: int = 0
+    n_image_tokens: int = 4096
+    # enc-dec (seamless): encoder depth; decoder length = seq // dec_ratio
+    n_enc_layers: int = 0
+    dec_ratio: int = 4
+    # ssm / hybrid
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    attn_every: int = 0          # zamba2: shared attn block every k mamba layers
+    is_rwkv: bool = False
+    # execution
+    sharding_mode: str = "megatron"   # "cascade" = paper-faithful baseline
+    microbatches: int = 1             # gradient-accumulation factor
+    remat: bool = True
+    q_chunk: int = 512
+    ssd_chunk: int = 128
+    optimizer: str = "adamw"     # "adafactor" for the very large configs
+    notes: str = ""
+
+    def with_(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                    # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+# long_500k needs sub-quadratic attention: only SSM/hybrid/linear-attention
+# families run it (see DESIGN.md §5 for the skip list).
+_LONG_OK_FAMILIES = ("ssm", "hybrid")
+
+
+def supports_shape(cfg: ArchConfig, shape: str) -> Tuple[bool, str]:
+    if shape == "long_500k" and cfg.family not in _LONG_OK_FAMILIES:
+        return False, (
+            "pure full-attention architecture: 500k-token decode would need "
+            "sub-quadratic attention (skip noted in DESIGN.md)"
+        )
+    return True, ""
+
+
+def token_input_specs(batch: int, seq: int) -> Dict[str, Any]:
+    return {
+        "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+    }
+
+
+def stackify(tree, n: int):
+    """Prepend a scan-layer dim to every ParamSpec in a tree."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.logical,
+                            s.dtype, s.init, s.scale),
+        tree,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def build_model(cfg: ArchConfig):
+    if cfg.family in ("dense", "moe"):
+        from repro.models.lm import DecoderLM
+        return DecoderLM(cfg)
+    if cfg.family == "vlm":
+        from repro.models.vision_lm import VisionLM
+        return VisionLM(cfg)
+    if cfg.family == "encdec":
+        from repro.models.encdec import EncDecLM
+        return EncDecLM(cfg)
+    if cfg.family == "ssm":
+        from repro.models.rwkv_model import RWKVModel
+        return RWKVModel(cfg)
+    if cfg.family == "hybrid":
+        from repro.models.hybrid import HybridModel
+        return HybridModel(cfg)
+    raise ValueError(f"unknown family {cfg.family}")
+
+
+# ---------------------------------------------------------------------------
+# Shared loss: chunked cross-entropy that never materializes [B,S,V] fp32
+# ---------------------------------------------------------------------------
+
+
+def lm_loss_chunked(
+    head_w: jnp.ndarray,     # [d, V]
+    x: jnp.ndarray,          # [B, S, d] final hidden states
+    labels: jnp.ndarray,     # [B, S] int32 (next-token targets)
+    chunk: int = 512,
+) -> jnp.ndarray:
+    """Mean next-token CE, computed per sequence chunk under remat so the
+    full logits tensor is never resident (vocab can be 150k+)."""
+    B, S, d = x.shape
+    if S % chunk:
+        chunk = S
+    n = S // chunk
+    xc = x.reshape(B, n, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, n, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def step(acc, inp):
+        xb, lb = inp
+        logits = jnp.einsum("bsd,dv->bsv", xb, head_w,
+                            preferred_element_type=jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lb[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(lse - gold), None
+
+    total, _ = jax.lax.scan(step, jnp.zeros((), jnp.float32), (xc, lc))
+    return total / (B * S)

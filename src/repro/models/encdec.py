@@ -1,0 +1,203 @@
+"""Seamless-M4T-v2-class encoder-decoder (audio frontend stubbed).
+
+Encoder: bidirectional self-attn + GELU MLP over precomputed frame
+embeddings. Decoder: causal self-attn + cross-attn + GELU MLP over text
+tokens. LayerNorm (not RMSNorm) per the original architecture. Decoder
+length = seq_len // dec_ratio for train/prefill shapes (frames dominate).
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import ParamSpec, shard_act
+from repro.layers.attention import (
+    attention_spec,
+    cross_attention,
+    decode_self_attention,
+    mha,
+    self_attention,
+)
+from repro.layers.embedding import embed, embedding_spec, lm_head_spec
+from repro.layers.linear import linear, linear_spec
+from repro.layers.mlp import mlp, mlp_spec
+from repro.layers.norm import layernorm, layernorm_spec
+from repro.models.base import ArchConfig, lm_loss_chunked, stackify
+
+
+class EncDecLM:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.n_enc = cfg.n_enc_layers or cfg.n_layers
+
+    def _enc_block_spec(self):
+        cfg = self.cfg
+        return {
+            "ln1": layernorm_spec(cfg.d_model),
+            "attn": attention_spec(cfg.d_model, cfg.n_heads, cfg.n_kv,
+                                   cfg.head_dim, cfg.sharding_mode),
+            "ln2": layernorm_spec(cfg.d_model),
+            "ffn": mlp_spec(cfg.d_model, cfg.d_ff, cfg.sharding_mode),
+        }
+
+    def _dec_block_spec(self):
+        cfg = self.cfg
+        spec = self._enc_block_spec()
+        spec["ln_x"] = layernorm_spec(cfg.d_model)
+        spec["xattn"] = {
+            "wq": linear_spec(cfg.d_model, cfg.n_heads * cfg.head_dim, "col",
+                              cfg.sharding_mode),
+            "wk": linear_spec(cfg.d_model, cfg.n_kv * cfg.head_dim, "kv",
+                              cfg.sharding_mode),
+            "wv": linear_spec(cfg.d_model, cfg.n_kv * cfg.head_dim, "kv",
+                              cfg.sharding_mode),
+            "wo": linear_spec(cfg.n_heads * cfg.head_dim, cfg.d_model, "row",
+                              cfg.sharding_mode),
+        }
+        return spec
+
+    def param_specs(self):
+        cfg = self.cfg
+        return {
+            "embed": embedding_spec(cfg.vocab, cfg.d_model),
+            "enc_blocks": stackify(self._enc_block_spec(), self.n_enc),
+            "dec_blocks": stackify(self._dec_block_spec(), cfg.n_layers),
+            "ln_enc": layernorm_spec(cfg.d_model),
+            "ln_f": layernorm_spec(cfg.d_model),
+            "head": lm_head_spec(cfg.d_model, cfg.vocab),
+        }
+
+    # -- encoder --------------------------------------------------------------
+
+    def encode(self, params, frames: jnp.ndarray) -> jnp.ndarray:
+        cfg = self.cfg
+        B, S, _ = frames.shape
+        x = shard_act(frames, "batch", "seq", "act_embed")
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+        def body(x, layer_params):
+            h = layernorm(layer_params["ln1"], x)
+            h = self_attention(
+                layer_params["attn"], h, positions,
+                n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.head_dim,
+                causal=False, q_chunk=cfg.q_chunk,
+            )
+            x = x + h
+            h = layernorm(layer_params["ln2"], x)
+            x = x + mlp(layer_params["ffn"], h, act="gelu")
+            return shard_act(x, "batch", "seq", "act_embed"), None
+
+        fn = jax.checkpoint(body) if cfg.remat else body
+        x, _ = jax.lax.scan(fn, x, params["enc_blocks"])
+        return layernorm(params["ln_enc"], x)
+
+    # -- decoder --------------------------------------------------------------
+
+    def decode_stack(self, params, tokens: jnp.ndarray, memory: jnp.ndarray):
+        cfg = self.cfg
+        B, S = tokens.shape
+        x = embed(params["embed"], tokens)
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+        def body(x, layer_params):
+            h = layernorm(layer_params["ln1"], x)
+            h = self_attention(
+                layer_params["attn"], h, positions,
+                n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.head_dim,
+                causal=True, q_chunk=cfg.q_chunk,
+            )
+            x = x + h
+            h = layernorm(layer_params["ln_x"], x)
+            h = cross_attention(
+                layer_params["xattn"], h, memory,
+                n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.head_dim,
+                q_chunk=cfg.q_chunk,
+            )
+            x = x + h
+            h = layernorm(layer_params["ln2"], x)
+            x = x + mlp(layer_params["ffn"], h, act="gelu")
+            return shard_act(x, "batch", "seq", "act_embed"), None
+
+        fn = jax.checkpoint(body) if cfg.remat else body
+        x, _ = jax.lax.scan(fn, x, params["dec_blocks"])
+        return layernorm(params["ln_f"], x)
+
+    def forward(self, params, batch: Dict) -> jnp.ndarray:
+        memory = self.encode(params, batch["frames"])
+        x = self.decode_stack(params, batch["tokens"], memory)
+        logits = jnp.einsum("bsd,dv->bsv", x, params["head"]["w"],
+                            preferred_element_type=jnp.float32)
+        return shard_act(logits, "batch", "seq", "vocab")
+
+    def loss(self, params, batch: Dict) -> jnp.ndarray:
+        memory = self.encode(params, batch["frames"])
+        x = self.decode_stack(params, batch["tokens"], memory)
+        return lm_loss_chunked(params["head"]["w"], x, batch["labels"])
+
+    # -- decode ---------------------------------------------------------------
+
+    def decode_state_specs(self, batch: int, max_len: int):
+        cfg = self.cfg
+        mem_len = max(max_len // cfg.dec_ratio, 128)
+        kv = (cfg.n_layers, batch, max_len, cfg.n_kv, cfg.head_dim)
+        xkv = (cfg.n_layers, batch, mem_len, cfg.n_kv, cfg.head_dim)
+        axes = ("layers", "batch", "seq", "cache_heads", "cache_hd")
+        return {
+            "cache_k": ParamSpec(kv, axes, jnp.bfloat16, "zeros"),
+            "cache_v": ParamSpec(kv, axes, jnp.bfloat16, "zeros"),
+            "cross_k": ParamSpec(xkv, axes, jnp.bfloat16, "zeros"),
+            "cross_v": ParamSpec(xkv, axes, jnp.bfloat16, "zeros"),
+        }
+
+    def decode_step(self, params, state: Dict, tokens, pos):
+        cfg = self.cfg
+        x = embed(params["embed"], tokens[:, None])
+        B = x.shape[0]
+
+        def body(x, inp):
+            layer_params, ck, cv, xk, xv = inp
+            h = layernorm(layer_params["ln1"], x)
+            h, ck, cv = decode_self_attention(
+                layer_params["attn"], h, ck, cv, pos,
+                n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.head_dim,
+            )
+            x = x + h
+            h = layernorm(layer_params["ln_x"], x)
+            q = linear(layer_params["xattn"]["wq"], h).reshape(
+                B, 1, cfg.n_heads, cfg.head_dim)
+            o = mha(q, xk, xv, causal=False)
+            h = linear(layer_params["xattn"]["wo"],
+                       o.reshape(B, 1, cfg.n_heads * cfg.head_dim))
+            x = x + h
+            h = layernorm(layer_params["ln2"], x)
+            x = x + mlp(layer_params["ffn"], h, act="gelu")
+            return x, (ck, cv)
+
+        x, (ck, cv) = jax.lax.scan(
+            body, x,
+            (params["dec_blocks"], state["cache_k"], state["cache_v"],
+             state["cross_k"], state["cross_v"]),
+        )
+        x = layernorm(params["ln_f"], x)
+        logits = jnp.einsum("bsd,dv->bsv", x, params["head"]["w"],
+                            preferred_element_type=jnp.float32)[:, 0]
+        return logits, dict(state, cache_k=ck, cache_v=cv)
+
+    def input_specs(self, shape) -> Dict:
+        cfg = self.cfg
+        B = shape.global_batch
+        if shape.kind in ("train", "prefill"):
+            dec_len = max(shape.seq_len // cfg.dec_ratio, 128)
+            return {
+                "frames": jax.ShapeDtypeStruct(
+                    (B, shape.seq_len, cfg.d_model), jnp.bfloat16),
+                "tokens": jax.ShapeDtypeStruct((B, dec_len), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((B, dec_len), jnp.int32),
+            }
+        return {
+            "tokens": jax.ShapeDtypeStruct((B,), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        }

@@ -1,0 +1,156 @@
+"""Zamba2-2.7B-class hybrid: Mamba2 backbone + SHARED attention block.
+
+54 Mamba2 layers in 9 groups of 6; after each group the same (weight-shared)
+attention+MLP block is applied — the extreme case of the paper's
+weights-resident-on-chip principle (one block's weights serve 9 call sites).
+Decode keeps O(1) SSM state per layer plus one KV cache per shared-block
+call site, so ``long_500k`` runs (linear per-token cost).
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import ParamSpec, shard_act
+from repro.layers.embedding import embed, embedding_spec, lm_head_spec
+from repro.layers.norm import rmsnorm, rmsnorm_spec
+from repro.layers.ssm import mamba2, mamba2_decode, mamba2_spec
+from repro.models.base import ArchConfig, lm_loss_chunked, stackify, token_input_specs
+from repro.models.blocks import attn_block, attn_block_decode, attn_block_spec
+
+
+class HybridModel:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        assert cfg.attn_every > 0 and cfg.n_layers % cfg.attn_every == 0
+        self.n_groups = cfg.n_layers // cfg.attn_every
+        self.d_inner = cfg.ssm_expand * cfg.d_model
+        self.ssm_heads = self.d_inner // cfg.ssm_head_dim
+
+    def _mamba_layer_spec(self):
+        cfg = self.cfg
+        return {
+            "ln": rmsnorm_spec(cfg.d_model),
+            "mamba": mamba2_spec(
+                cfg.d_model, expand=cfg.ssm_expand,
+                head_dim=cfg.ssm_head_dim, d_state=cfg.ssm_state,
+                mode=cfg.sharding_mode,
+            ),
+        }
+
+    def param_specs(self):
+        cfg = self.cfg
+        return {
+            "embed": embedding_spec(cfg.vocab, cfg.d_model),
+            "mamba_blocks": stackify(
+                stackify(self._mamba_layer_spec(), cfg.attn_every),
+                self.n_groups,
+            ),
+            # ONE shared attention block (not stacked): reused by all groups
+            "shared_attn": attn_block_spec(cfg),
+            "ln_f": rmsnorm_spec(cfg.d_model),
+            "head": lm_head_spec(cfg.d_model, cfg.vocab),
+        }
+
+    def backbone(self, params, tokens):
+        cfg = self.cfg
+        B, S = tokens.shape
+        x = embed(params["embed"], tokens)
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        shared = params["shared_attn"]
+
+        def group(x, mamba_stack):
+            def inner(x, layer_params):
+                h = rmsnorm(layer_params["ln"], x)
+                x = x + mamba2(
+                    layer_params["mamba"], h,
+                    head_dim=cfg.ssm_head_dim, d_state=cfg.ssm_state,
+                    chunk=cfg.ssd_chunk,
+                )
+                return shard_act(x, "batch", "seq", "act_embed"), None
+
+            x, _ = jax.lax.scan(inner, x, mamba_stack)
+            x, _ = attn_block(shared, x, positions, cfg)
+            return x, None
+
+        fn = jax.checkpoint(group) if cfg.remat else group
+        x, _ = jax.lax.scan(fn, x, params["mamba_blocks"])
+        return rmsnorm(params["ln_f"], x)
+
+    def forward(self, params, batch: Dict) -> jnp.ndarray:
+        x = self.backbone(params, batch["tokens"])
+        logits = jnp.einsum("bsd,dv->bsv", x, params["head"]["w"],
+                            preferred_element_type=jnp.float32)
+        return shard_act(logits, "batch", "seq", "vocab")
+
+    def loss(self, params, batch: Dict) -> jnp.ndarray:
+        x = self.backbone(params, batch["tokens"])
+        return lm_loss_chunked(params["head"]["w"], x, batch["labels"])
+
+    # -- decode ---------------------------------------------------------------
+
+    def decode_state_specs(self, batch: int, max_len: int):
+        cfg = self.cfg
+        G, E = self.n_groups, cfg.attn_every
+        H, P, N = self.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+        return {
+            "ssm": ParamSpec((G, E, batch, H, P, N),
+                             ("layers", "layers", "batch", "mlp", None, None),
+                             jnp.float32, "zeros"),
+            "conv": ParamSpec((G, E, batch, 3, self.d_inner),
+                              ("layers", "layers", "batch", None, "act_mlp"),
+                              jnp.float32, "zeros"),
+            "cache_k": ParamSpec(
+                (G, batch, max_len, cfg.n_kv, cfg.head_dim),
+                ("layers", "batch", "seq", "cache_heads", "cache_hd"),
+                jnp.bfloat16, "zeros"),
+            "cache_v": ParamSpec(
+                (G, batch, max_len, cfg.n_kv, cfg.head_dim),
+                ("layers", "batch", "seq", "cache_heads", "cache_hd"),
+                jnp.bfloat16, "zeros"),
+        }
+
+    def decode_step(self, params, state: Dict, tokens, pos):
+        cfg = self.cfg
+        x = embed(params["embed"], tokens[:, None])
+        shared = params["shared_attn"]
+
+        def group(x, inp):
+            mamba_stack, ssm_states, conv_states, ck, cv = inp
+
+            def inner(x, inp2):
+                layer_params, s, c = inp2
+                h = rmsnorm(layer_params["ln"], x)
+                o, s, c = mamba2_decode(
+                    layer_params["mamba"], h, s, c,
+                    head_dim=cfg.ssm_head_dim,
+                )
+                return x + o, (s, c)
+
+            x, (ssm_states, conv_states) = jax.lax.scan(
+                inner, x, (mamba_stack, ssm_states, conv_states)
+            )
+            x, ck, cv = attn_block_decode(shared, x, ck, cv, pos, cfg)
+            return x, (ssm_states, conv_states, ck, cv)
+
+        x, (ssm, conv, ck, cv) = jax.lax.scan(
+            group, x,
+            (params["mamba_blocks"], state["ssm"], state["conv"],
+             state["cache_k"], state["cache_v"]),
+        )
+        x = rmsnorm(params["ln_f"], x)
+        logits = jnp.einsum("bsd,dv->bsv", x, params["head"]["w"],
+                            preferred_element_type=jnp.float32)[:, 0]
+        return logits, {"ssm": ssm, "conv": conv, "cache_k": ck,
+                        "cache_v": cv}
+
+    def input_specs(self, shape) -> Dict:
+        if shape.kind in ("train", "prefill"):
+            return token_input_specs(shape.global_batch, shape.seq_len)
+        return {
+            "tokens": jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        }

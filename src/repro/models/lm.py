@@ -1,0 +1,112 @@
+"""Decoder-only LM (dense GQA and MoE variants).
+
+Covers: yi-6b, qwen1.5-4b, qwen1.5-110b, mistral-large-123b,
+phi3.5-moe-42b-a6.6b, kimi-k2-1t-a32b.
+
+Layers run under a single lax.scan over stacked parameters (HLO size O(1)
+in depth); each block is rematerialized when cfg.remat is set.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import ParamSpec, shard_act
+from repro.layers.embedding import embed, embedding_spec, lm_head_spec
+from repro.layers.norm import rmsnorm, rmsnorm_spec
+from repro.models.base import ArchConfig, lm_loss_chunked, stackify, token_input_specs
+from repro.models.blocks import attn_block, attn_block_decode, attn_block_spec
+
+
+class DecoderLM:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.use_moe = cfg.family == "moe"
+
+    # -- parameters -----------------------------------------------------------
+
+    def param_specs(self):
+        cfg = self.cfg
+        return {
+            "embed": embedding_spec(cfg.vocab, cfg.d_model),
+            "blocks": stackify(
+                attn_block_spec(cfg, use_moe=self.use_moe), cfg.n_layers
+            ),
+            "ln_f": rmsnorm_spec(cfg.d_model),
+            "head": lm_head_spec(cfg.d_model, cfg.vocab),
+        }
+
+    # -- training / prefill ---------------------------------------------------
+
+    def backbone(self, params, tokens: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        cfg = self.cfg
+        B, S = tokens.shape
+        x = embed(params["embed"], tokens)
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+        def body(carry, layer_params):
+            x, aux = carry
+            x, a = attn_block(layer_params, x, positions, cfg)
+            return (x, aux + a), None
+
+        fn = jax.checkpoint(body) if cfg.remat else body
+        (x, aux), _ = jax.lax.scan(
+            fn, (x, jnp.zeros((), jnp.float32)), params["blocks"]
+        )
+        x = rmsnorm(params["ln_f"], x)
+        return x, aux
+
+    def forward(self, params, batch: Dict) -> jnp.ndarray:
+        """Prefill entry point: full logits."""
+        x, _ = self.backbone(params, batch["tokens"])
+        logits = jnp.einsum("bsd,dv->bsv", x, params["head"]["w"],
+                            preferred_element_type=jnp.float32)
+        return shard_act(logits, "batch", "seq", "vocab")
+
+    def loss(self, params, batch: Dict) -> jnp.ndarray:
+        x, aux = self.backbone(params, batch["tokens"])
+        ce = lm_loss_chunked(params["head"]["w"], x, batch["labels"])
+        return ce + 0.01 * aux
+
+    # -- decode ---------------------------------------------------------------
+
+    def decode_state_specs(self, batch: int, max_len: int):
+        cfg = self.cfg
+        shape = (cfg.n_layers, batch, max_len, cfg.n_kv, cfg.head_dim)
+        axes = ("layers", "batch", "seq", "cache_heads", "cache_hd")
+        return {
+            "cache_k": ParamSpec(shape, axes, jnp.bfloat16, init="zeros"),
+            "cache_v": ParamSpec(shape, axes, jnp.bfloat16, init="zeros"),
+        }
+
+    def decode_step(self, params, state: Dict, tokens: jnp.ndarray,
+                    pos: jnp.ndarray):
+        """One token for every sequence. tokens [B] int32; pos [] int32."""
+        cfg = self.cfg
+        x = embed(params["embed"], tokens[:, None])
+
+        def body(x, inp):
+            layer_params, ck, cv = inp
+            x, ck, cv = attn_block_decode(layer_params, x, ck, cv, pos, cfg)
+            return x, (ck, cv)
+
+        x, (ck, cv) = jax.lax.scan(
+            body, x, (params["blocks"], state["cache_k"], state["cache_v"])
+        )
+        x = rmsnorm(params["ln_f"], x)
+        logits = jnp.einsum("bsd,dv->bsv", x, params["head"]["w"],
+                            preferred_element_type=jnp.float32)[:, 0]
+        return logits, {"cache_k": ck, "cache_v": cv}
+
+    # -- dry-run input specs --------------------------------------------------
+
+    def input_specs(self, shape) -> Dict:
+        if shape.kind in ("train", "prefill"):
+            return token_input_specs(shape.global_batch, shape.seq_len)
+        return {
+            "tokens": jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        }

@@ -1,0 +1,132 @@
+"""RWKV6-7B (Finch): attention-free decoder LM.
+
+Decode state is O(1) per layer (token-shift carries + the P x P wkv state),
+so ``long_500k`` runs with constant memory — this is one of the two archs
+where the assignment's long-context cell executes.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import ParamSpec, shard_act
+from repro.layers.embedding import embed, embedding_spec, lm_head_spec
+from repro.layers.norm import layernorm, layernorm_spec
+from repro.layers.rwkv import (
+    rwkv6_channel_mix,
+    rwkv6_spec,
+    rwkv6_time_mix,
+)
+from repro.models.base import ArchConfig, lm_loss_chunked, stackify, token_input_specs
+
+
+class RWKVModel:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.head_dim = cfg.ssm_head_dim or 64
+        self.n_heads = cfg.d_model // self.head_dim
+
+    def _layer_spec(self):
+        cfg = self.cfg
+        return {
+            "ln1": layernorm_spec(cfg.d_model),
+            "ln2": layernorm_spec(cfg.d_model),
+            "mix": rwkv6_spec(cfg.d_model, cfg.d_ff, head_dim=self.head_dim,
+                              mode=cfg.sharding_mode),
+        }
+
+    def param_specs(self):
+        cfg = self.cfg
+        return {
+            "embed": embedding_spec(cfg.vocab, cfg.d_model),
+            "ln0": layernorm_spec(cfg.d_model),
+            "blocks": stackify(self._layer_spec(), cfg.n_layers),
+            "ln_f": layernorm_spec(cfg.d_model),
+            "head": lm_head_spec(cfg.d_model, cfg.vocab),
+        }
+
+    def backbone(self, params, tokens):
+        cfg = self.cfg
+        x = embed(params["embed"], tokens)
+        x = layernorm(params["ln0"], x)
+
+        def body(x, layer_params):
+            h = layernorm(layer_params["ln1"], x)
+            x = x + rwkv6_time_mix(layer_params["mix"], h,
+                                   head_dim=self.head_dim)
+            h = layernorm(layer_params["ln2"], x)
+            x = x + rwkv6_channel_mix(layer_params["mix"], h)
+            return shard_act(x, "batch", "seq", "act_embed"), None
+
+        fn = jax.checkpoint(body) if cfg.remat else body
+        x, _ = jax.lax.scan(fn, x, params["blocks"])
+        return layernorm(params["ln_f"], x)
+
+    def forward(self, params, batch: Dict) -> jnp.ndarray:
+        x = self.backbone(params, batch["tokens"])
+        logits = jnp.einsum("bsd,dv->bsv", x, params["head"]["w"],
+                            preferred_element_type=jnp.float32)
+        return shard_act(logits, "batch", "seq", "vocab")
+
+    def loss(self, params, batch: Dict) -> jnp.ndarray:
+        x = self.backbone(params, batch["tokens"])
+        return lm_loss_chunked(params["head"]["w"], x, batch["labels"])
+
+    # -- decode (O(1) state; no KV cache) -------------------------------------
+
+    def decode_state_specs(self, batch: int, max_len: int):
+        cfg = self.cfg
+        L, D = cfg.n_layers, cfg.d_model
+        H, P = self.n_heads, self.head_dim
+        return {
+            "tm_prev": ParamSpec((L, batch, D), ("layers", "batch", None),
+                                 jnp.bfloat16, "zeros"),
+            "cm_prev": ParamSpec((L, batch, D), ("layers", "batch", None),
+                                 jnp.bfloat16, "zeros"),
+            "wkv": ParamSpec((L, batch, H, P, P),
+                             ("layers", "batch", "act_heads", None, None),
+                             jnp.float32, "zeros"),
+        }
+
+    def decode_step(self, params, state: Dict, tokens, pos):
+        cfg = self.cfg
+        del pos  # recurrent: position-free
+        x = embed(params["embed"], tokens[:, None])
+        x = layernorm(params["ln0"], x)
+
+        def body(x, inp):
+            layer_params, tm_prev, cm_prev, wkv = inp
+            h = layernorm(layer_params["ln1"], x)
+            o, tm_new, wkv = rwkv6_time_mix(
+                layer_params["mix"], h, head_dim=self.head_dim,
+                tm_prev=tm_prev, wkv_state=wkv, return_state=True,
+            )
+            x = x + o
+            h = layernorm(layer_params["ln2"], x)
+            o, cm_new = rwkv6_channel_mix(
+                layer_params["mix"], h, cm_prev=cm_prev, return_state=True,
+            )
+            x = x + o
+            return x, (tm_new.astype(jnp.bfloat16),
+                       cm_new.astype(jnp.bfloat16), wkv)
+
+        x, (tm, cm, wkv) = jax.lax.scan(
+            body, x,
+            (params["blocks"], state["tm_prev"], state["cm_prev"],
+             state["wkv"]),
+        )
+        x = layernorm(params["ln_f"], x)
+        logits = jnp.einsum("bsd,dv->bsv", x, params["head"]["w"],
+                            preferred_element_type=jnp.float32)[:, 0]
+        return logits, {"tm_prev": tm, "cm_prev": cm, "wkv": wkv}
+
+    def input_specs(self, shape) -> Dict:
+        if shape.kind in ("train", "prefill"):
+            return token_input_specs(shape.global_batch, shape.seq_len)
+        return {
+            "tokens": jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        }

@@ -1,0 +1,173 @@
+"""Llama-3.2-Vision-90B-class model: decoder LM with interleaved
+cross-attention layers over precomputed vision patch embeddings.
+
+100 layers = 20 super-blocks x (4 self-attn + 1 gated cross-attn). The
+vision frontend is a stub per the assignment: ``input_specs`` supplies
+patch embeddings [B, n_image_tokens, d_model].
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import ParamSpec, shard_act
+from repro.layers.attention import mha
+from repro.layers.embedding import embed, embedding_spec, lm_head_spec
+from repro.layers.linear import linear
+from repro.layers.norm import rmsnorm, rmsnorm_spec
+from repro.models.base import ArchConfig, lm_loss_chunked, stackify
+from repro.models.blocks import (
+    attn_block,
+    attn_block_decode,
+    attn_block_spec,
+    cross_block,
+    make_cross_block_spec,
+)
+
+
+class VisionLM:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        assert cfg.cross_attn_every > 1
+        self.self_per_block = cfg.cross_attn_every - 1
+        assert cfg.n_layers % cfg.cross_attn_every == 0
+        self.n_super = cfg.n_layers // cfg.cross_attn_every
+
+    def param_specs(self):
+        cfg = self.cfg
+        return {
+            "embed": embedding_spec(cfg.vocab, cfg.d_model),
+            "self_blocks": stackify(
+                stackify(attn_block_spec(cfg), self.self_per_block),
+                self.n_super,
+            ),
+            "cross_blocks": stackify(make_cross_block_spec(cfg), self.n_super),
+            "ln_f": rmsnorm_spec(cfg.d_model),
+            "head": lm_head_spec(cfg.d_model, cfg.vocab),
+        }
+
+    def backbone(self, params, tokens, vision):
+        cfg = self.cfg
+        B, S = tokens.shape
+        x = embed(params["embed"], tokens)
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        vision = shard_act(vision, "batch", "seq", "act_embed")
+
+        def superblock(x, inp):
+            selfs, cross = inp
+
+            def inner(x, layer_params):
+                x, _ = attn_block(layer_params, x, positions, cfg)
+                return x, None
+
+            x, _ = jax.lax.scan(inner, x, selfs)
+            x = cross_block(cross, x, vision, cfg)
+            return x, None
+
+        fn = jax.checkpoint(superblock) if cfg.remat else superblock
+        x, _ = jax.lax.scan(
+            fn, x, (params["self_blocks"], params["cross_blocks"])
+        )
+        return rmsnorm(params["ln_f"], x)
+
+    def forward(self, params, batch: Dict) -> jnp.ndarray:
+        x = self.backbone(params, batch["tokens"], batch["vision"])
+        logits = jnp.einsum("bsd,dv->bsv", x, params["head"]["w"],
+                            preferred_element_type=jnp.float32)
+        return shard_act(logits, "batch", "seq", "vocab")
+
+    def loss(self, params, batch: Dict) -> jnp.ndarray:
+        x = self.backbone(params, batch["tokens"], batch["vision"])
+        return lm_loss_chunked(params["head"]["w"], x, batch["labels"])
+
+    # -- decode ---------------------------------------------------------------
+
+    def decode_state_specs(self, batch: int, max_len: int):
+        cfg = self.cfg
+        kv_shape = (self.n_super, self.self_per_block, batch, max_len,
+                    cfg.n_kv, cfg.head_dim)
+        kv_axes = ("layers", "layers", "batch", "seq", "cache_heads",
+                   "cache_hd")
+        xk_shape = (self.n_super, batch, cfg.n_image_tokens, cfg.n_kv,
+                    cfg.head_dim)
+        xk_axes = ("layers", "batch", "seq", "cache_heads", "cache_hd")
+        return {
+            "cache_k": ParamSpec(kv_shape, kv_axes, jnp.bfloat16, "zeros"),
+            "cache_v": ParamSpec(kv_shape, kv_axes, jnp.bfloat16, "zeros"),
+            "cross_k": ParamSpec(xk_shape, xk_axes, jnp.bfloat16, "zeros"),
+            "cross_v": ParamSpec(xk_shape, xk_axes, jnp.bfloat16, "zeros"),
+        }
+
+    def init_cross_cache(self, params, vision):
+        """Precompute per-superblock cross K/V from vision embeddings."""
+        cfg = self.cfg
+        B, M, _ = vision.shape
+
+        def one(cross):
+            k = linear(cross["xattn"]["wk"], vision).reshape(
+                B, M, cfg.n_kv, cfg.head_dim)
+            v = linear(cross["xattn"]["wv"], vision).reshape(
+                B, M, cfg.n_kv, cfg.head_dim)
+            return k, v
+
+        ks, vs = jax.vmap(one)(params["cross_blocks"])
+        return ks, vs
+
+    def decode_step(self, params, state: Dict, tokens, pos):
+        cfg = self.cfg
+        x = embed(params["embed"], tokens[:, None])
+        B = x.shape[0]
+
+        def superblock(x, inp):
+            selfs, cross, ck, cv, xk, xv = inp
+
+            def inner(x, inp2):
+                layer_params, k1, v1 = inp2
+                x, k1, v1 = attn_block_decode(layer_params, x, k1, v1, pos,
+                                              cfg)
+                return x, (k1, v1)
+
+            x, (ck, cv) = jax.lax.scan(inner, x, (selfs, ck, cv))
+            # gated cross-attention against the precomputed vision cache
+            h = rmsnorm(cross["ln1"], x)
+            q = linear(cross["xattn"]["wq"], h).reshape(
+                B, 1, cfg.n_heads, cfg.head_dim)
+            o = mha(q, xk, xv, causal=False)
+            h = linear(cross["xattn"]["wo"],
+                       o.reshape(B, 1, cfg.n_heads * cfg.head_dim))
+            gate = jnp.tanh(cross["gate"].astype(jnp.float32)).astype(x.dtype)
+            x = x + gate * h
+            h = rmsnorm(cross["ln2"], x)
+            from repro.layers.mlp import swiglu
+            x = x + swiglu(cross["ffn"], h)
+            return x, (ck, cv)
+
+        x, (ck, cv) = jax.lax.scan(
+            superblock, x,
+            (params["self_blocks"], params["cross_blocks"],
+             state["cache_k"], state["cache_v"],
+             state["cross_k"], state["cross_v"]),
+        )
+        x = rmsnorm(params["ln_f"], x)
+        logits = jnp.einsum("bsd,dv->bsv", x, params["head"]["w"],
+                            preferred_element_type=jnp.float32)[:, 0]
+        state = dict(state, cache_k=ck, cache_v=cv)
+        return logits, state
+
+    def input_specs(self, shape) -> Dict:
+        cfg = self.cfg
+        B = shape.global_batch
+        if shape.kind in ("train", "prefill"):
+            return {
+                "tokens": jax.ShapeDtypeStruct((B, shape.seq_len), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((B, shape.seq_len), jnp.int32),
+                "vision": jax.ShapeDtypeStruct(
+                    (B, cfg.n_image_tokens, cfg.d_model), jnp.bfloat16),
+            }
+        return {
+            "tokens": jax.ShapeDtypeStruct((B,), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        }

@@ -1,0 +1,16 @@
+from repro.optim.optimizers import adamw, adafactor, make_optimizer, Optimizer
+from repro.optim.compression import (
+    compress_int8,
+    decompress_int8,
+    error_feedback_reduce,
+)
+
+__all__ = [
+    "adamw",
+    "adafactor",
+    "make_optimizer",
+    "Optimizer",
+    "compress_int8",
+    "decompress_int8",
+    "error_feedback_reduce",
+]

@@ -1,0 +1,188 @@
+"""Optimizers (pytree-functional, no external deps).
+
+* ``adamw``     — fp32 moments, decoupled weight decay, global-norm clip.
+* ``adafactor`` — factored second moment for >=2D params (row/col statistics),
+                  no first moment; the memory-frugal choice for the 100B-1T
+                  configs (see EXPERIMENTS.md fit analysis).
+
+Each optimizer also exposes ``state_specs(param_specs)`` returning a
+ParamSpec pytree for the optimizer state, so the dry-run can derive
+NamedShardings for it. Optimizer-state logical axes reuse the parameter's
+axes, with the "fsdp" dim additionally spread over the pod axis when present
+(ZeRO-1 style: cheaper state, no extra forward/backward comm).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import ParamSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Any]   # (grads, state, params) -> (updates, state)
+    state_specs: Callable[[Any], Any]
+
+
+def _global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def _clip_by_global_norm(grads, max_norm: float):
+    norm = _global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+_IS_SPEC = lambda x: isinstance(x, ParamSpec)  # noqa: E731
+
+
+def adamw(
+    lr: float = 3e-4,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.01,
+    max_grad_norm: float = 1.0,
+) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        grads, gnorm = _clip_by_global_norm(grads, max_grad_norm)
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        bc1 = 1.0 - b1**t
+        bc2 = 1.0 - b2**t
+
+        def upd(g, m, v, p):
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            u = u + weight_decay * p.astype(jnp.float32)
+            return (-lr * u), m, v
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        updates = jax.tree.map(lambda o: o[0], out,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        m = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+        v = jax.tree.map(lambda o: o[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+        return updates, {"m": m, "v": v, "step": step}, gnorm
+
+    def state_specs(param_specs):
+        def f32(s: ParamSpec) -> ParamSpec:
+            return ParamSpec(s.shape, s.logical, jnp.float32, "zeros")
+
+        return {
+            "m": jax.tree.map(f32, param_specs, is_leaf=_IS_SPEC),
+            "v": jax.tree.map(f32, param_specs, is_leaf=_IS_SPEC),
+            "step": ParamSpec((), (), jnp.int32, "zeros"),
+        }
+
+    return Optimizer(init, update, state_specs)
+
+
+def adafactor(
+    lr: float = 1e-3,
+    decay: float = 0.8,       # running-average exponent for v
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+    max_grad_norm: float = 1.0,
+) -> Optimizer:
+    """Factored second-moment optimizer (Shazeer & Stern 2018), beta1=0."""
+
+    def _factored(shape) -> bool:
+        return len(shape) >= 2
+
+    def init(params):
+        def one(p):
+            if _factored(p.shape):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {
+            "f": jax.tree.map(one, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        grads, gnorm = _clip_by_global_norm(grads, max_grad_norm)
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        beta = 1.0 - t ** (-decay)
+
+        def upd(g, f, p):
+            g2 = g * g + eps
+            if _factored(g.shape):
+                vr = beta * f["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * f["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.mean(vr, axis=-1, keepdims=True)
+                v_est = (vr[..., :, None] * vc[..., None, :]) / (
+                    denom[..., None] + eps
+                )
+                u = g * jax.lax.rsqrt(v_est + eps)
+                nf = {"vr": vr, "vc": vc}
+            else:
+                v = beta * f["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(v + eps)
+                nf = {"v": v}
+            # update clipping (RMS)
+            rms = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (-lr * u), nf
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_f = tdef.flatten_up_to(state["f"])
+        outs = [upd(g, f, p) for g, f, p in zip(flat_g, flat_f, flat_p)]
+        updates = tdef.unflatten([o[0] for o in outs])
+        nf = tdef.unflatten([o[1] for o in outs])
+        return updates, {"f": nf, "step": step}, gnorm
+
+    def state_specs(param_specs):
+        def one(s: ParamSpec):
+            if _factored(s.shape):
+                return {
+                    "vr": ParamSpec(s.shape[:-1], s.logical[:-1],
+                                    jnp.float32, "zeros"),
+                    "vc": ParamSpec(s.shape[:-2] + s.shape[-1:],
+                                    s.logical[:-2] + s.logical[-1:],
+                                    jnp.float32, "zeros"),
+                }
+            return {"v": ParamSpec(s.shape, s.logical, jnp.float32, "zeros")}
+
+        return {
+            "f": jax.tree.map(one, param_specs, is_leaf=_IS_SPEC),
+            "step": ParamSpec((), (), jnp.int32, "zeros"),
+        }
+
+    return Optimizer(init, update, state_specs)
+
+
+def make_optimizer(name: str, lr: float = 3e-4) -> Optimizer:
+    if name == "adamw":
+        return adamw(lr=lr)
+    if name == "adafactor":
+        return adafactor(lr=lr)
+    raise ValueError(f"unknown optimizer {name}")

@@ -1,0 +1,90 @@
+"""Shift-Round-Saturate (SRS) primitives.
+
+On AIE-ML, quantization is fused into the vector store: ``VST.SRS`` applies a
+right shift (power-of-two rescale), rounding, and saturation in a single
+instruction. We reproduce those integer semantics exactly so that the Pallas
+kernel ("AIE sim" analogue) and the pure-jnp oracle ("x86 sim" analogue) are
+bit-identical.
+
+All arithmetic is performed in the accumulator dtype (int32 by default) with
+two's-complement wraparound semantics — the same on XLA:CPU, XLA:TPU and the
+Pallas interpreter — so bit-exactness is a property of the math, not the
+backend.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# (min, max) representable values per integer dtype.
+INT_RANGE = {
+    "int8": (-128, 127),
+    "int16": (-32768, 32767),
+    "int32": (-(2**31), 2**31 - 1),
+}
+
+VALID_ROUNDING = ("floor", "half_up", "half_even")
+
+
+def saturate(x: jnp.ndarray, out_dtype: str) -> jnp.ndarray:
+    """Clamp ``x`` to the representable range of ``out_dtype`` and cast."""
+    lo, hi = INT_RANGE[out_dtype]
+    return jnp.clip(x, lo, hi).astype(out_dtype)
+
+
+def _round_shift(acc: jnp.ndarray, shift: int, rounding: str) -> jnp.ndarray:
+    """Arithmetic right shift by ``shift`` with the requested rounding mode.
+
+    ``shift`` is a static Python int >= 0. Overflow of the rounding addend
+    wraps in-accumulator-dtype, matching hardware behaviour.
+    """
+    if shift == 0:
+        return acc
+    if rounding == "floor":
+        return acc >> shift
+    half = jnp.asarray(1 << (shift - 1), dtype=acc.dtype)
+    if rounding == "half_up":
+        # Round half towards +inf: floor((acc + half) >> shift).
+        return (acc + half) >> shift
+    if rounding == "half_even":
+        floor = acc >> shift
+        rem = acc & jnp.asarray((1 << shift) - 1, dtype=acc.dtype)
+        bump = (rem > half) | ((rem == half) & ((floor & 1) == 1))
+        return floor + bump.astype(acc.dtype)
+    raise ValueError(f"unknown rounding mode {rounding!r}")
+
+
+def srs(
+    acc: jnp.ndarray,
+    shift: int,
+    out_dtype: str = "int8",
+    rounding: str = "half_up",
+) -> jnp.ndarray:
+    """Shift-round-saturate: the AIE ``VST.SRS`` store path.
+
+    Args:
+      acc: integer accumulator values (int32/int64).
+      shift: static right-shift amount (power-of-two rescale), >= 0.
+      out_dtype: output integer dtype name ("int8"/"int16"/"int32").
+      rounding: "half_up" (AIE default we adopt), "half_even", or "floor".
+
+    Returns:
+      Requantized values in ``out_dtype``.
+    """
+    if shift < 0:
+        raise ValueError("SRS shift must be non-negative")
+    if rounding not in VALID_ROUNDING:
+        raise ValueError(f"unknown rounding mode {rounding!r}")
+    return saturate(_round_shift(acc, shift, rounding), out_dtype)
+
+
+def requant_shift(in_shift: int, w_shift: int, out_shift: int) -> int:
+    """SRS shift for y = x @ w: accumulator lives at scale 2^-(sx+sw); to emit
+    outputs at scale 2^-sy we shift right by (sx + sw - sy)."""
+    s = in_shift + w_shift - out_shift
+    if s < 0:
+        raise ValueError(
+            f"requantization would need a LEFT shift ({s}); "
+            "choose a smaller output shift"
+        )
+    return s

@@ -1,0 +1,11 @@
+from repro.train.checkpoint import CheckpointManager
+from repro.train.fault import FailureInjector, StragglerMonitor
+from repro.train.trainer import Trainer, TrainerConfig
+
+__all__ = [
+    "CheckpointManager",
+    "FailureInjector",
+    "StragglerMonitor",
+    "Trainer",
+    "TrainerConfig",
+]

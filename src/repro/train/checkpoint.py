@@ -1,0 +1,123 @@
+"""Sharded, atomic checkpointing with elastic restore.
+
+Layout:  <dir>/step_<k>/  shard_<host>.npz  + manifest.json
+Writes land in ``step_<k>.tmp`` and are renamed into place only when
+complete (a crash mid-save can never corrupt the latest checkpoint).
+``restore(..., shardings=...)`` re-device_puts onto ANY mesh shape, so a
+job restarted on a different device count resumes from the same state
+(elastic scaling). Retention keeps the newest ``keep`` checkpoints.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = leaf
+    return out
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, host_id: int = 0,
+                 n_hosts: int = 1):
+        self.dir = directory
+        self.keep = keep
+        self.host_id = host_id
+        self.n_hosts = n_hosts
+        os.makedirs(directory, exist_ok=True)
+
+    # -- write ---------------------------------------------------------------
+
+    def save(self, step: int, state: Any, metadata: Optional[Dict] = None):
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        flat = _flatten(state)
+        arrays = {}
+        for k, v in flat.items():
+            a = np.asarray(v)
+            if str(a.dtype) == "bfloat16":  # npz can't hold bf16; restore
+                a = a.astype(np.float32)    # casts back via the template
+            arrays[k] = a
+        np.savez(os.path.join(tmp, f"shard_{self.host_id}.npz"), **arrays)
+        treedef = jax.tree_util.tree_structure(state)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(
+                {
+                    "step": step,
+                    "keys": sorted(arrays.keys()),
+                    "treedef": str(treedef),
+                    "n_hosts": self.n_hosts,
+                    "metadata": metadata or {},
+                },
+                f,
+            )
+        os.replace(tmp, final) if not os.path.exists(final) else None
+        if os.path.exists(tmp):  # final existed: overwrite atomically
+            shutil.rmtree(final)
+            os.replace(tmp, final)
+        self._gc()
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # -- read ----------------------------------------------------------------
+
+    def all_steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, template: Any,
+                shardings: Any = None) -> Any:
+        """Restore into the structure of ``template``; optionally re-shard
+        onto new device layouts (elastic restart)."""
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        data = np.load(os.path.join(path, f"shard_{self.host_id}.npz"))
+        flat_t = jax.tree_util.tree_flatten_with_path(template)
+        leaves = []
+        for p, leaf in flat_t[0]:
+            key = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
+                           for q in p)
+            arr = data[key]
+            leaves.append(arr)
+        restored = jax.tree_util.tree_unflatten(flat_t[1], leaves)
+        if shardings is not None:
+            restored = jax.tree.map(
+                lambda a, s: jax.device_put(a, s), restored, shardings
+            )
+        else:
+            restored = jax.tree.map(
+                lambda a, t: jax.numpy.asarray(a, dtype=t.dtype)
+                if hasattr(t, "dtype") else a,
+                restored, template,
+            )
+        return restored
+
+    def metadata(self, step: int) -> Dict:
+        path = os.path.join(self.dir, f"step_{step:08d}", "manifest.json")
+        with open(path) as f:
+            return json.load(f).get("metadata", {})

@@ -1,0 +1,78 @@
+"""Cascade resolution invariants + analytic MODEL_FLOPS accounting."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core.cascade import cascade_grid_factor, resolve_cascade
+from repro.core.device import AIEMLDevice, NATIVE_TILINGS
+from repro.launch.model_flops import model_flops, param_counts
+from repro.models.base import SHAPES
+
+DEV = AIEMLDevice()
+T8 = NATIVE_TILINGS[("int8", "int8")]
+
+
+@given(f_in=st.integers(1, 4096), f_out=st.integers(1, 4096))
+@settings(max_examples=40, deadline=None)
+def test_resolve_cascade_covers_layer(f_in, f_out):
+    c = resolve_cascade(f_in, f_out, T8, DEV, batch=128, a_bytes=1, w_bytes=1)
+    assert c.cas_len * c.f_in_slice >= f_in
+    assert c.cas_num * c.f_out_slice >= f_out
+    assert c.f_in_slice % T8.K == 0
+    assert c.f_out_slice % T8.N == 0
+    # resident weight slice fits tile-local memory
+    assert c.f_in_slice * c.f_out_slice <= DEV.local_mem_bytes
+
+
+def test_resolve_cascade_honors_overrides():
+    c = resolve_cascade(256, 256, T8, DEV, batch=128, a_bytes=1, w_bytes=1,
+                        overrides={"cas_len": 4, "cas_num": 2})
+    assert c.cas_len == 4 and c.cas_num == 2
+    assert c.cas_len * c.f_in_slice >= 256
+
+
+def test_cascade_grid_factor():
+    assert cascade_grid_factor(16, 4) == (4, 4)
+    assert cascade_grid_factor(16, 16) == (16, 1)
+    assert cascade_grid_factor(7, 3) == (1, 7)  # prime TP
+
+
+# ---------------------------------------------------------------------------
+
+
+def test_param_counts_match_known_sizes():
+    """Sanity: published parameter counts within 12%."""
+    expect = {
+        "yi_6b": 6.1e9,
+        "qwen1_5_4b": 4.0e9,
+        "mistral_large_123b": 123e9,
+        "qwen1_5_110b": 111e9,
+        "rwkv6_7b": 7.6e9,
+        "zamba2_2_7b": 2.7e9,
+        "kimi_k2_1t": 1.0e12,
+        "phi3_5_moe_42b": 42e9,
+    }
+    for arch, want in expect.items():
+        total, active = param_counts(get_config(arch))
+        assert abs(total - want) / want < 0.12, (arch, total, want)
+        assert active <= total
+
+
+def test_moe_active_params():
+    """Kimi: ~32B active of ~1T total (top-8 of 384 experts)."""
+    total, active = param_counts(get_config("kimi_k2_1t"))
+    assert 25e9 < active < 45e9, active
+    assert total > 9e11
+
+
+def test_model_flops_scaling():
+    cfg = get_config("yi_6b")
+    t = model_flops(cfg, SHAPES["train_4k"])
+    p = model_flops(cfg, SHAPES["prefill_32k"])
+    d = model_flops(cfg, SHAPES["decode_32k"])
+    # train = 6ND over 1M tokens; prefill = 2ND over 1M tokens => 3x
+    assert t / p == pytest.approx(3.0, rel=0.01)
+    # decode: 2*N*batch(128) tokens
+    _, n_active = param_counts(cfg)
+    assert d == pytest.approx(2.0 * n_active * 128, rel=1e-6)

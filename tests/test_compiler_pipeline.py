@@ -1,0 +1,187 @@
+"""End-to-end AIE4ML compiler pipeline: passes, packing, bit-exactness."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    AIEMLDevice,
+    CompileConfig,
+    DenseSpec,
+    OpKind,
+    build_mlp_graph,
+    compile_graph,
+    run_passes,
+)
+from repro.core.packing import pack_dense_weight, tile_interleave
+
+RNG = np.random.default_rng(7)
+
+
+def _mlp(batch=16, f_in=48, widths=(64, 32, 10), seed=3):
+    layers = []
+    for i, w in enumerate(widths):
+        layers.append(DenseSpec(
+            w,
+            bias=RNG.standard_normal(w) * 0.1,
+            activation="relu" if i + 1 < len(widths) else None,
+        ))
+    return build_mlp_graph(batch=batch, f_in=f_in, layers=list(layers),
+                           seed=seed)
+
+
+def test_lower_fuses_dense_relu():
+    g = _mlp()
+    run_passes(g, CompileConfig())
+    denses = g.compute_nodes()
+    assert all(n.op != OpKind.RELU for n in g)
+    assert denses[0].params.get("relu") is True
+    assert denses[-1].params.get("relu") is not True
+
+
+def test_quantize_pass_populates_chain():
+    g = _mlp()
+    run_passes(g, CompileConfig())
+    prev_shift = g.inputs()[0].quant["shift"]
+    for n in g.compute_nodes():
+        q = n.quant
+        assert q["in_shift"] == prev_shift
+        assert q["srs_shift"] == q["in_shift"] + q["w_shift"] - q["out_shift"]
+        assert q["srs_shift"] >= 0
+        assert q["weight_q"].dtype == np.int8
+        prev_shift = q["out_shift"]
+
+
+def test_resolve_and_place_fit_device():
+    g = _mlp()
+    run_passes(g, CompileConfig())
+    dev = g.meta["device"]
+    assert g.meta["tiles_used"] <= dev.n_tiles
+    for n in g.compute_nodes():
+        c = n.cascade
+        assert c.cas_len * c.f_in_slice >= \
+            g.predecessors(n.name)[0].out_spec.features
+        assert c.cas_num * c.f_out_slice >= n.out_spec.features
+        p = n.place
+        assert 0 <= p.col and p.col + p.width <= dev.n_cols
+        assert 0 <= p.row and p.row + p.height <= dev.n_rows
+
+
+def test_packing_roundtrip():
+    """Packed tile stream reconstructs the padded weight exactly."""
+    w = RNG.integers(-128, 128, (50, 70)).astype(np.int8)
+    out = pack_dense_weight(w, cas_len=2, cas_num=3, f_in_slice=32,
+                            f_out_slice=24, K=8, N=8)
+    packed, padded = out["packed"], out["padded"]
+    # reconstruct
+    rec = np.zeros_like(padded)
+    kt, nt = 32 // 8, 24 // 8
+    for r in range(3):
+        for c in range(2):
+            slice_ = packed[r, c]  # [kt, nt, K, N]
+            flat = slice_.transpose(0, 2, 1, 3).reshape(32, 24)
+            rec[c * 32:(c + 1) * 32, r * 24:(r + 1) * 24] = flat
+    np.testing.assert_array_equal(rec, padded)
+    np.testing.assert_array_equal(padded[:50, :70], w)
+    assert (padded[50:, :] == 0).all() and (padded[:, 70:] == 0).all()
+
+
+def test_tile_interleave_layout():
+    w = np.arange(32).reshape(8, 4).astype(np.int8)
+    t = tile_interleave(w, 4, 2)  # [2, 2, 4, 2]
+    np.testing.assert_array_equal(t[0, 0], w[:4, :2])
+    np.testing.assert_array_equal(t[1, 1], w[4:, 2:])
+
+
+def test_memtile_edges_and_retiling():
+    g = _mlp()
+    run_passes(g, CompileConfig())
+    edges = g.memtile_edges
+    assert len(edges) == 3  # dense0->dense1, dense1->dense2, dense2->output
+    e01 = [e for e in edges if e.src == "dense_0" and e.dst == "dense_1"][0]
+    # writer emits (M, N) tiles; reader consumes (M, K) tiles — re-tiling
+    assert e01.write_tiling[1] == g["dense_0"].tile["N"]
+    assert e01.read_tiling[1] == g["dense_1"].tile["K"]
+    assert e01.double_buffered
+    assert g.meta["memtile_bytes"] <= \
+        g.meta["device"].n_memtiles * g.meta["device"].memtile_bytes
+
+
+def test_x86_aie_bit_exact_and_float_close():
+    g = _mlp()
+    x = RNG.uniform(-1, 1, (16, 48)).astype(np.float32)
+    m = compile_graph(g, CompileConfig(calib=x))
+    y_x86 = m.predict(x, mode="x86")
+    y_aie = m.predict(x, mode="aie")
+    np.testing.assert_array_equal(y_x86, y_aie)
+    # against float reference
+    h = x
+    for n in g.compute_nodes():
+        h = h @ n.params["weight"]
+        if "bias" in n.params:
+            h = h + n.params["bias"]
+        if n.params.get("relu"):
+            h = np.maximum(h, 0)
+    rel = np.abs(h - y_x86).max() / (np.abs(h).max() + 1e-9)
+    assert rel < 0.06
+
+
+def test_user_overrides_honored():
+    g = _mlp()
+    g["dense_1"].overrides.update({"cas_len": 2, "cas_num": 2,
+                                   "place": (10, 3)})
+    run_passes(g, CompileConfig())
+    n = g["dense_1"]
+    assert n.cascade.cas_len == 2 and n.cascade.cas_num == 2
+    assert (n.place.col, n.place.row) == (10, 3)
+
+
+def test_mixed_precision_per_layer():
+    g = _mlp()
+    g["dense_1"].overrides["w_dtype"] = "int8"
+    g["dense_0"].overrides["a_dtype"] = "int16"  # dense_0 emits int16
+    run_passes(g, CompileConfig())
+    assert g["dense_0"].quant["a_dtype"] == "int16"
+    # dense_1 consumes int16 activations with int8 weights => <4,4,8> tiling
+    assert (g["dense_1"].tile["M"], g["dense_1"].tile["K"],
+            g["dense_1"].tile["N"]) == (4, 4, 8)
+
+
+def test_analytic_ceilings_match_paper_table1():
+    dev = AIEMLDevice()
+    assert dev.peak_gops("int8", "int8") == pytest.approx(640.0)
+    assert dev.peak_gops("int16", "int8") == pytest.approx(320.0)
+    assert dev.peak_gops("int16", "int16") == pytest.approx(160.0)
+
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+
+@given(
+    batch=st.integers(1, 32),
+    f_in=st.integers(1, 96),
+    widths=st.lists(st.integers(1, 96), min_size=1, max_size=4),
+    seed=st.integers(0, 2**31),
+)
+@settings(max_examples=10, deadline=None)
+def test_property_pipeline_bit_exact_any_mlp(batch, f_in, widths, seed):
+    """System invariant: ANY mlp (ragged dims, any depth) compiles through
+    the full pipeline and the two simulation modes are bit-exact."""
+    rng = np.random.default_rng(seed)
+    layers = [DenseSpec(w, activation="relu" if i % 2 == 0 else None,
+                        bias=rng.standard_normal(w) * 0.1)
+              for i, w in enumerate(widths)]
+    g = build_mlp_graph(batch=batch, f_in=f_in, layers=layers, seed=seed)
+    x = rng.uniform(-1, 1, (batch, f_in)).astype(np.float32)
+    m = compile_graph(g, CompileConfig(calib=x))
+    np.testing.assert_array_equal(m.predict(x, "x86"), m.predict(x, "aie"))
+    # every placement legal, every memtile edge within capacity
+    dev = g.meta["device"]
+    assert g.meta["tiles_used"] <= dev.n_tiles
+    assert g.meta["memtile_bytes"] <= dev.n_memtiles * dev.memtile_bytes
+
+
+def test_oversized_model_raises():
+    layers = [DenseSpec(8192, activation="relu") for _ in range(8)]
+    g = build_mlp_graph(batch=128, f_in=8192, layers=layers)
+    with pytest.raises(ValueError):
+        run_passes(g, CompileConfig())

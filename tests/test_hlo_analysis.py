@@ -1,0 +1,106 @@
+"""HLO analyzer: parsing, trip-count scaling, collective accounting."""
+
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import (
+    ModuleAnalysis,
+    _group_size,
+    _shape_bytes,
+    _wire_bytes,
+    analyze_hlo,
+)
+
+HLO = """\
+HloModule test, entry_computation_layout={()->f32[]}
+
+%body (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,16]{1,0} get-tuple-element(%p), index=1
+  %w = f32[16,16]{1,0} constant({...})
+  %dot.1 = f32[8,16]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,16]{1,0} all-reduce(%dot.1), replica_groups=[2,4]<=[8], to_apply=%add
+  ROOT %t = (s32[], f32[8,16]{1,0}) tuple(%i, %ar)
+}
+
+%cond (p: (s32[], f32[8,16])) -> pred[] {
+  %p = (s32[], f32[8,16]{1,0}) parameter(0)
+  ROOT %lt = pred[] compare(%p, %p), direction=LT
+}
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main () -> f32[] {
+  %init = (s32[], f32[8,16]{1,0}) tuple()
+  %w1 = (s32[], f32[8,16]{1,0}) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"10"}}
+  %ag = f32[32,16]{1,0} all-gather(%w1), replica_groups={{0,1,2,3}}, dimensions={0}
+  ROOT %r = f32[] constant(0)
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[8,16]{1,0}") == 8 * 16 * 4
+    assert _shape_bytes("bf16[4]") == 8
+    assert _shape_bytes("(s32[], f32[2,2]{1,0})") == 4 + 16
+    assert _shape_bytes("pred[]") == 1
+
+
+def test_group_size_formats():
+    assert _group_size("replica_groups=[2,4]<=[8]") == 4
+    assert _group_size("replica_groups={{0,1,2,3},{4,5,6,7}}") == 4
+    assert _group_size("no groups here", default=3) == 3
+
+
+def test_wire_bytes_factors():
+    assert _wire_bytes("all-reduce", 100, 4) == pytest.approx(150.0)
+    assert _wire_bytes("all-gather", 100, 4) == pytest.approx(75.0)
+    assert _wire_bytes("reduce-scatter", 100, 4) == pytest.approx(300.0)
+    assert _wire_bytes("all-to-all", 100, 4) == pytest.approx(75.0)
+    assert _wire_bytes("collective-permute", 100, 4) == pytest.approx(100.0)
+    assert _wire_bytes("all-reduce", 100, 1) == 0.0
+
+
+def test_trip_count_scaling_and_collectives():
+    st = analyze_hlo(HLO)
+    # dot: 2 * (8*16) * 16 = 4096 flops per iter, x10 trips
+    assert st.flops == pytest.approx(40960.0)
+    # all-reduce in body: 512B * 2*(4-1)/4 = 768 per iter x10 = 7680
+    # all-gather in entry: 2048B * 3/4 = 1536
+    assert st.per_collective["all-reduce"] == pytest.approx(7680.0)
+    assert st.per_collective["all-gather"] == pytest.approx(1536.0)
+    assert st.collective_bytes == pytest.approx(7680.0 + 1536.0)
+    assert st.collective_ops == {"all-reduce": 10, "all-gather": 1}
+
+
+def test_comment_stripping():
+    hlo = HLO.replace("f32[8,16]{1,0} get-tuple-element(%p), index=1",
+                      "f32[8,16]{1,0} get-tuple-element(%p), /*index=5*/ index=1")
+    st = analyze_hlo(hlo)
+    assert st.flops == pytest.approx(40960.0)
+
+
+def test_fusion_bodies_contribute_flops_not_bytes():
+    hlo = """\
+HloModule t, entry_computation_layout={()->f32[]}
+
+%fc (a: f32[4,4]) -> f32[4,4] {
+  %a = f32[4,4]{1,0} parameter(0)
+  ROOT %dot.9 = f32[4,4]{1,0} dot(%a, %a), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+
+ENTRY %main () -> f32[] {
+  %x = f32[4,4]{1,0} constant({...})
+  %f = f32[4,4]{1,0} fusion(%x), kind=kLoop, calls=%fc
+  ROOT %r = f32[] constant(0)
+}
+"""
+    st = analyze_hlo(hlo)
+    assert st.flops == pytest.approx(2 * 16 * 4)
+    # bytes counted only at the fusion call site (operand+result), not inside
+    assert st.bytes == pytest.approx(2 * 64)

@@ -1,0 +1,238 @@
+"""Layer-level correctness: attention chunking/decode parity, SSD vs naive
+recurrence, RWKV batch-vs-stepwise parity, MoE routing invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.dist.sharding import init_params
+from repro.layers import attention, moe, rwkv, ssm
+from repro.layers.linear import linear
+from repro.layers.rope import apply_rope, rope_freqs
+
+KEY = jax.random.PRNGKey(0)
+B, S, D = 2, 16, 64
+
+
+@pytest.fixture(scope="module")
+def attn_setup():
+    spec = attention.attention_spec(D, 8, 4, 8, "megatron", qkv_bias=True)
+    p = init_params(KEY, spec)
+    x = jax.random.normal(KEY, (B, S, D), jnp.bfloat16)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    return p, x, pos
+
+
+def test_chunked_equals_unchunked(attn_setup):
+    p, x, pos = attn_setup
+    kw = dict(n_heads=8, n_kv=4, head_dim=8)
+    y1 = attention.self_attention(p, x, pos, q_chunk=4, **kw)
+    y2 = attention.self_attention(p, x, pos, q_chunk=10**9, **kw)
+    np.testing.assert_allclose(
+        np.asarray(y1, np.float32), np.asarray(y2, np.float32), atol=2e-2)
+
+
+def test_causality(attn_setup):
+    """Perturbing a future token must not change past outputs."""
+    p, x, pos = attn_setup
+    kw = dict(n_heads=8, n_kv=4, head_dim=8)
+    y1 = attention.self_attention(p, x, pos, **kw)
+    x2 = x.at[:, -1].set(x[:, -1] + 1.0)
+    y2 = attention.self_attention(p, x2, pos, **kw)
+    np.testing.assert_array_equal(
+        np.asarray(y1[:, :-1], np.float32), np.asarray(y2[:, :-1], np.float32))
+
+
+def test_decode_matches_full_forward(attn_setup):
+    p, x, pos = attn_setup
+    kw = dict(n_heads=8, n_kv=4, head_dim=8)
+    y_full = attention.self_attention(p, x, pos, **kw)
+    # build a cache from the first S-1 tokens
+    k = linear(p["wk"], x).reshape(B, S, 4, 8)
+    v = linear(p["wv"], x).reshape(B, S, 4, 8)
+    k = apply_rope(k, pos, rope_freqs(8))
+    ck = jnp.zeros((B, S, 4, 8), jnp.bfloat16).at[:, :S - 1].set(k[:, :S - 1])
+    cv = jnp.zeros((B, S, 4, 8), jnp.bfloat16).at[:, :S - 1].set(v[:, :S - 1])
+    out, nk, nv = attention.decode_self_attention(
+        p, x[:, S - 1:S], ck, cv, jnp.int32(S - 1), **kw)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(y_full[:, S - 1:S], np.float32),
+        atol=2e-2)
+    # cache got the new token written
+    np.testing.assert_allclose(np.asarray(nk[:, S - 1], np.float32),
+                               np.asarray(k[:, S - 1], np.float32), atol=2e-2)
+
+
+def test_gqa_head_grouping(attn_setup):
+    """With 8 q-heads over 4 kv-heads, groups of 2 share each kv head."""
+    q = jax.random.normal(KEY, (B, S, 8, 8), jnp.float32)
+    k = jax.random.normal(KEY, (B, S, 4, 8), jnp.float32)
+    v = jax.random.normal(KEY, (B, S, 4, 8), jnp.float32)
+    y = attention.mha(q, k, v, causal=True)
+    # brute-force reference
+    ref = np.zeros((B, S, 8, 8), np.float32)
+    qn, kn, vn = map(np.asarray, (q, k, v))
+    for h in range(8):
+        kv = h // 2
+        sc = np.einsum("bqd,bsd->bqs", qn[:, :, h], kn[:, :, kv]) / np.sqrt(8)
+        mask = np.tril(np.ones((S, S), bool))
+        sc = np.where(mask[None], sc, -1e30)
+        w = np.exp(sc - sc.max(-1, keepdims=True))
+        w = w / w.sum(-1, keepdims=True)
+        ref[:, :, h] = np.einsum("bqs,bsd->bqd", w, vn[:, :, kv])
+    np.testing.assert_allclose(np.asarray(y), ref, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+
+
+def test_ssd_chunked_vs_naive():
+    H, P, N = 4, 8, 8
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((B, S, H, P)), jnp.float32)
+    dA = jnp.asarray(-np.abs(rng.standard_normal((B, S, H))) * 0.5, jnp.float32)
+    Bm = jnp.asarray(rng.standard_normal((B, S, N)), jnp.float32)
+    Cm = jnp.asarray(rng.standard_normal((B, S, N)), jnp.float32)
+    y, fin = ssm.ssd_chunked(x, dA, Bm, Cm, chunk=4)
+    h = np.zeros((B, H, P, N))
+    ys = []
+    for t in range(S):
+        h = h * np.exp(np.asarray(dA[:, t]))[..., None, None] + np.einsum(
+            "bhp,bn->bhpn", np.asarray(x[:, t]), np.asarray(Bm[:, t]))
+        ys.append(np.einsum("bhpn,bn->bhp", h, np.asarray(Cm[:, t])))
+    np.testing.assert_allclose(np.asarray(y), np.stack(ys, 1), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(fin), h, atol=1e-4)
+
+
+def test_mamba2_decode_matches_chunked():
+    spec = ssm.mamba2_spec(D, expand=2, head_dim=8, d_state=8, mode="megatron")
+    p = init_params(KEY, spec)
+    x = jax.random.normal(KEY, (B, S, D), jnp.bfloat16)
+    y_full = ssm.mamba2(p, x, head_dim=8, d_state=8, chunk=4)
+    st = jnp.zeros((B, 16, 8, 8), jnp.float32)
+    cv = jnp.zeros((B, 3, 2 * D), jnp.float32)
+    outs = []
+    for t in range(S):
+        o, st, cv = ssm.mamba2_decode(p, x[:, t:t + 1], st, cv, head_dim=8)
+        outs.append(o)
+    y_dec = jnp.concatenate(outs, 1)
+    np.testing.assert_allclose(np.asarray(y_dec, np.float32),
+                               np.asarray(y_full, np.float32), atol=0.2)
+
+
+def test_rwkv_stepwise_matches_batch():
+    spec = rwkv.rwkv6_spec(D, 4 * D, head_dim=8, mode="megatron")
+    p = init_params(KEY, spec)
+    x = jax.random.normal(KEY, (B, S, D), jnp.bfloat16)
+    y_batch, last, Sfin = rwkv.rwkv6_time_mix(p, x, head_dim=8,
+                                              return_state=True)
+    prev = jnp.zeros((B, D), jnp.bfloat16)
+    Swk = jnp.zeros((B, 8, 8, 8), jnp.float32)
+    outs = []
+    for t in range(S):
+        o, prev, Swk = rwkv.rwkv6_time_mix(
+            p, x[:, t:t + 1], head_dim=8, tm_prev=prev, wkv_state=Swk,
+            return_state=True)
+        outs.append(o)
+    y_step = jnp.concatenate(outs, 1)
+    np.testing.assert_allclose(np.asarray(y_step, np.float32),
+                               np.asarray(y_batch, np.float32), atol=0.1)
+    np.testing.assert_allclose(np.asarray(Swk), np.asarray(Sfin), atol=1e-2)
+
+
+def test_wkv_chunked_exact():
+    rng = np.random.default_rng(0)
+    T = 64
+    r, k, v = (jnp.asarray(rng.standard_normal((B, T, 2, 8)), jnp.float32)
+               for _ in range(3))
+    w = jnp.asarray(rng.uniform(0.5, 0.99, (B, T, 2, 8)), jnp.float32)
+    u = jnp.asarray(rng.standard_normal((2, 8)), jnp.float32)
+    y1, f1 = rwkv.wkv_scan(r, k, v, w, u, chunk=16)
+    y2, f2 = rwkv.wkv_scan(r, k, v, w, u, chunk=10**9)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+    np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2))
+
+
+# ---------------------------------------------------------------------------
+
+
+def test_moe_routes_to_topk_and_combines():
+    E, k = 8, 2
+    spec = moe.moe_spec(D, 128, E, "megatron")
+    p = init_params(KEY, spec)
+    x = jax.random.normal(KEY, (B, S, D), jnp.bfloat16)
+    y, aux = moe.moe(p, x, n_experts=E, top_k=k, capacity_factor=4.0)
+    assert y.shape == x.shape
+    assert jnp.isfinite(y.astype(jnp.float32)).all()
+    assert float(aux) >= 1.0 - 1e-3  # switch aux loss lower bound is 1
+
+
+def test_moe_capacity_drops_tokens_not_crashes():
+    E, k = 4, 2
+    spec = moe.moe_spec(D, 64, E, "megatron")
+    p = init_params(KEY, spec)
+    x = jax.random.normal(KEY, (B, S, D), jnp.bfloat16)
+    # capacity_factor tiny -> heavy dropping, still well-defined output
+    y, _ = moe.moe(p, x, n_experts=E, top_k=k, capacity_factor=0.1)
+    assert jnp.isfinite(y.astype(jnp.float32)).all()
+
+
+def test_moe_grouped_matches_global():
+    """Group-limited dispatch == global sort when capacity is ample."""
+    E, k = 8, 2
+    spec = moe.moe_spec(D, 128, E, "megatron")
+    p = init_params(KEY, spec)
+    x = jax.random.normal(KEY, (4, 16, D), jnp.bfloat16)
+    y1, a1 = moe.moe(p, x, n_experts=E, top_k=k, capacity_factor=8.0)
+    y2, a2 = moe.moe(p, x, n_experts=E, top_k=k, capacity_factor=8.0,
+                     n_groups=4)
+    np.testing.assert_allclose(np.asarray(y1, np.float32),
+                               np.asarray(y2, np.float32), atol=2e-2)
+    np.testing.assert_allclose(float(a1), float(a2), atol=1e-5)
+
+
+def test_flash_path_in_mha():
+    """The opt-in Pallas flash path agrees with the pure-JAX block."""
+    q = jax.random.normal(KEY, (2, 32, 4, 16), jnp.float32)
+    k = jax.random.normal(KEY, (2, 32, 2, 16), jnp.float32)
+    v = jax.random.normal(KEY, (2, 32, 2, 16), jnp.float32)
+    want = attention.mha(q, k, v, causal=True)
+    attention.USE_FLASH_KERNEL = True
+    try:
+        got = attention.mha(q, k, v, causal=True)
+    finally:
+        attention.USE_FLASH_KERNEL = False
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_fit_pspec_divisibility_and_duplicates():
+    from jax.sharding import Mesh, PartitionSpec as P
+    from repro.dist.sharding import fit_pspec
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        class devices:  # noqa: N801
+            shape = (4, 8)
+
+    m = FakeMesh()
+    # indivisible dims drop axes
+    assert fit_pspec((3, 16), P("data", "model"), m) == P(None, "model")
+    # composite axes keep the divisible prefix
+    assert fit_pspec((8,), P(("data", "model"),), m) == P(("data",))
+    # duplicate mesh axis: first dim wins
+    assert fit_pspec((32, 32), P("model", "model"), m) == P("model", None)
+
+
+def test_moe_gate_weights_scale_output():
+    """With capacity ample, doubling router logits sharpens but keeps
+    normalization: gates per token sum to 1 (renormalized top-k)."""
+    E, k = 4, 2
+    spec = moe.moe_spec(D, 64, E, "megatron")
+    p = init_params(KEY, spec)
+    x = jax.random.normal(KEY, (1, 4, D), jnp.bfloat16)
+    logits = jnp.einsum("td,de->te", x.reshape(-1, D).astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    vals, _ = jax.lax.top_k(jax.nn.softmax(logits, -1), k)
+    renorm = vals / vals.sum(-1, keepdims=True)
+    np.testing.assert_allclose(np.asarray(renorm.sum(-1)), 1.0, atol=1e-6)

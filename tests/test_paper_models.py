@@ -1,0 +1,22 @@
+"""The paper's own Table III/V workloads compile and run bit-exactly."""
+
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import (
+    PAPER_MODELS,
+    build_paper_model,
+)
+
+
+@pytest.mark.parametrize("name", list(PAPER_MODELS))
+def test_paper_model_compiles_and_is_bit_exact(name):
+    m = build_paper_model(name, batch=16)
+    rows, f_in, widths, _ = PAPER_MODELS[name]
+    rng = np.random.default_rng(0)
+    x = rng.uniform(-1, 1, (16, f_in)).astype(np.float32)
+    y86 = m.predict(x, "x86")
+    yai = m.predict(x, "aie")
+    np.testing.assert_array_equal(y86, yai)
+    assert y86.shape == (16, widths[-1])
+    assert m.tiles_used <= 304

@@ -1,0 +1,110 @@
+"""Branch-and-bound placement: optimality, constraints, Eq. 2 semantics."""
+
+import itertools
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ir import PlacementSpec
+from repro.core.placement import Block, Placer, placement_cost
+
+
+def test_cost_function_eq2():
+    # two 1x1 blocks side by side at row 0: J = |c_out0 - c_in1| + mu*(0+0)
+    a = PlacementSpec(0, 0, 1, 1)
+    b = PlacementSpec(1, 0, 1, 1)
+    assert placement_cost([a, b], lam=1.0, mu=0.05) == pytest.approx(1.0)
+    # vertical hop costs lambda
+    c = PlacementSpec(1, 2, 1, 1)
+    assert placement_cost([a, c], lam=1.0, mu=0.05) == pytest.approx(
+        1.0 + 1.0 * 2 + 0.05 * 2)
+
+
+def test_ports_follow_paper_convention():
+    p = PlacementSpec(3, 2, 4, 2)
+    assert p.c_in == 3          # inputs broadcast up the leftmost column
+    assert p.c_out == 6         # cascade exits east
+    assert p.r_in == p.r_out == 2
+    assert p.r_top == 3
+
+
+def test_bnb_matches_brute_force_small():
+    placer = Placer(5, 3, lam=1.0, mu=0.05, beam=None)
+    blocks = [Block(2, 2), Block(1, 2), Block(2, 1)]
+    got = placer.branch_and_bound(blocks, start=(0, 0))
+    want = placer.brute_force(blocks, start=(0, 0))
+    assert got.cost == pytest.approx(want.cost)
+
+
+@given(
+    sizes=st.lists(
+        st.tuples(st.integers(1, 2), st.integers(1, 2)),
+        min_size=2, max_size=4),
+    lam=st.floats(0.1, 2.0), mu=st.floats(0.0, 0.5),
+)
+@settings(max_examples=20, deadline=None)
+def test_bnb_optimal_property(sizes, lam, mu):
+    placer = Placer(4, 3, lam=lam, mu=mu, beam=None)
+    blocks = [Block(w, h) for w, h in sizes]
+    try:
+        want = placer.brute_force(blocks)
+    except ValueError:
+        # instance is infeasible: B&B must agree
+        with pytest.raises(ValueError):
+            placer.branch_and_bound(blocks)
+        return
+    got = placer.branch_and_bound(blocks)
+    assert got.cost == pytest.approx(want.cost)
+
+
+def test_no_overlap_and_in_bounds():
+    placer = Placer(6, 4, beam=32)
+    blocks = [Block(3, 2), Block(2, 2), Block(3, 2), Block(2, 1)]
+    res = placer.branch_and_bound(blocks, start=(0, 0))
+    rects = [(p.col, p.row, p.width, p.height) for p in res.positions]
+    for (c, r, w, h) in rects:
+        assert 0 <= c and c + w <= 6 and 0 <= r and r + h <= 4
+    for (a, b) in itertools.combinations(res.positions, 2):
+        no_olap = (a.col + a.width <= b.col or b.col + b.width <= a.col
+                   or a.row + a.height <= b.row or b.row + b.height <= a.row)
+        assert no_olap
+
+
+def test_fixed_constraints_respected():
+    placer = Placer(6, 4, beam=None)
+    blocks = [Block(2, 2), Block(2, 2), Block(1, 1)]
+    res = placer.branch_and_bound(blocks, fixed={1: (4, 2)})
+    assert (res.positions[1].col, res.positions[1].row) == (4, 2)
+
+
+def test_infeasible_fixed_raises():
+    placer = Placer(4, 4, beam=None)
+    blocks = [Block(2, 2), Block(2, 2)]
+    with pytest.raises(ValueError):
+        placer.branch_and_bound(blocks, start=(0, 0), fixed={1: (1, 1)})
+
+
+def test_block_too_large_raises():
+    placer = Placer(4, 4)
+    with pytest.raises(ValueError):
+        placer.branch_and_bound([Block(5, 1)])
+
+
+def test_bnb_beats_or_ties_greedy_fig3_style():
+    """Paper Fig. 3: B&B vs greedy-right vs greedy-up on a 38x8 array."""
+    placer = Placer(38, 8, lam=1.0, mu=0.05, beam=64)
+    blocks = [Block(4, 4), Block(4, 2), Block(8, 2), Block(4, 4),
+              Block(2, 2), Block(8, 4), Block(4, 2), Block(2, 1)]
+    bnb = placer.branch_and_bound(blocks, start=(0, 0))
+    gr = placer.greedy_right(blocks)
+    gu = placer.greedy_up(blocks)
+    assert bnb.cost <= gr.cost + 1e-9
+    assert bnb.cost <= gu.cost + 1e-9
+    assert bnb.cost < gu.cost  # strictly better than at least one greedy
+
+
+def test_lower_row_bias():
+    """mu > 0 pulls blocks toward the memory-tile row (row 0)."""
+    placer = Placer(8, 8, lam=1.0, mu=0.5, beam=None)
+    res = placer.branch_and_bound([Block(2, 2), Block(2, 2)])
+    assert all(p.row == 0 for p in res.positions)

@@ -1,0 +1,104 @@
+"""Pallas qmatmul kernel vs pure-jnp oracle: bit-exact across shapes/dtypes.
+
+The kernel runs in interpret mode on CPU (the "AIE simulation" role); the
+oracle is ref.py (the "x86 simulation" role). The paper's bit-exactness
+guarantee is asserted literally: array_equal, not allclose.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.qmatmul.ops import qlinear
+from repro.kernels.qmatmul.ref import qlinear_ref
+
+RNG = np.random.default_rng(42)
+
+
+def _rand(shape, dtype):
+    lo, hi = (-128, 128) if dtype == jnp.int8 else (-1024, 1024)
+    return jnp.asarray(RNG.integers(lo, hi, shape), dtype)
+
+
+SHAPES = [
+    (1, 8, 8),          # GEMV corner
+    (4, 8, 8),          # one native AIE tile
+    (8, 128, 128),      # paper micro-batch latency setting
+    (128, 128, 128),    # paper Table II workload
+    (33, 70, 50),       # ragged: exercises the zero-pad path
+    (256, 64, 96),
+    (5, 1, 3),          # degenerate
+]
+
+
+@pytest.mark.parametrize("M,K,N", SHAPES)
+@pytest.mark.parametrize("relu", [False, True])
+@pytest.mark.parametrize("use_bias", [False, True])
+def test_i8_bit_exact(M, K, N, relu, use_bias):
+    x = _rand((M, K), jnp.int8)
+    w = _rand((K, N), jnp.int8)
+    b = jnp.asarray(RNG.integers(-(2**16), 2**16, (N,)), jnp.int32) \
+        if use_bias else None
+    for shift in (0, 5, 9):
+        got = qlinear(x, w, b, shift=shift, relu=relu)
+        want = qlinear_ref(x, w, b, shift=shift, relu=relu)
+        assert got.dtype == want.dtype == jnp.int8
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("M,K,N", [(8, 16, 24), (64, 64, 64)])
+@pytest.mark.parametrize("dt_a,dt_b,out_dtype", [
+    ("int16", "int8", "int8"),
+    ("int16", "int8", "int16"),
+    ("int16", "int16", "int16"),
+])
+def test_mixed_precision_bit_exact(M, K, N, dt_a, dt_b, out_dtype):
+    x = _rand((M, K), jnp.dtype(dt_a))
+    w = _rand((K, N), jnp.dtype(dt_b))
+    got = qlinear(x, w, None, shift=8, out_dtype=out_dtype)
+    want = qlinear_ref(x, w, None, shift=8, out_dtype=out_dtype)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("rounding", ["floor", "half_up", "half_even"])
+def test_rounding_modes_bit_exact(rounding):
+    x = _rand((16, 32), jnp.int8)
+    w = _rand((32, 16), jnp.int8)
+    got = qlinear(x, w, None, shift=6, rounding=rounding)
+    want = qlinear_ref(x, w, None, shift=6, rounding=rounding)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("acc_blocks", [(1, 1), (1, 2), (2, 1), (2, 2)])
+def test_accumulator_blocking_schemes(acc_blocks):
+    """The paper's 2x2 scheme and its degenerate variants all agree."""
+    x = _rand((32, 48), jnp.int8)
+    w = _rand((48, 32), jnp.int8)
+    got = qlinear(x, w, None, shift=7, block=(8, 16, 8),
+                  acc_blocks=acc_blocks)
+    want = qlinear_ref(x, w, None, shift=7)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(
+    m=st.integers(1, 40), k=st.integers(1, 48), n=st.integers(1, 40),
+    shift=st.integers(0, 12), relu=st.booleans(), seed=st.integers(0, 2**31),
+)
+@settings(max_examples=25, deadline=None)
+def test_property_random_shapes(m, k, n, shift, relu, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(-128, 128, (m, k)), jnp.int8)
+    w = jnp.asarray(rng.integers(-128, 128, (k, n)), jnp.int8)
+    b = jnp.asarray(rng.integers(-(2**12), 2**12, (n,)), jnp.int32)
+    got = qlinear(x, w, b, shift=shift, relu=relu)
+    want = qlinear_ref(x, w, b, shift=shift, relu=relu)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_relu_clamps_after_srs():
+    """Algorithm 1 order: SRS then ReLU — negatives become exactly 0."""
+    x = jnp.full((4, 8), -10, jnp.int8)
+    w = jnp.full((8, 4), 10, jnp.int8)
+    y = qlinear(x, w, None, shift=0, relu=True)
+    assert np.asarray(y).min() == 0

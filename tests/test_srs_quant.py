@@ -1,0 +1,101 @@
+"""SRS (shift-round-saturate) semantics + quantization properties."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.quant.qtensor import QTensor, choose_shift, quantize, requantize
+from repro.quant.srs import INT_RANGE, requant_shift, saturate, srs
+
+SETTINGS = dict(max_examples=50, deadline=None)
+
+
+def test_saturate_bounds():
+    x = jnp.array([-1000, -129, -128, 0, 127, 128, 1000], jnp.int32)
+    y = saturate(x, "int8")
+    assert y.dtype == jnp.int8
+    np.testing.assert_array_equal(
+        np.asarray(y), [-128, -128, -128, 0, 127, 127, 127])
+
+
+@pytest.mark.parametrize("rounding", ["floor", "half_up", "half_even"])
+def test_srs_matches_integer_reference(rounding):
+    rng = np.random.default_rng(0)
+    acc = rng.integers(-(2**24), 2**24, 4096).astype(np.int32)
+    for shift in [0, 1, 3, 8, 15]:
+        got = np.asarray(srs(jnp.asarray(acc), shift, "int8", rounding))
+        # pure-python reference
+        ref = []
+        for a in acc.tolist():
+            if shift == 0:
+                r = a
+            elif rounding == "floor":
+                r = a >> shift
+            elif rounding == "half_up":
+                r = (a + (1 << (shift - 1))) >> shift
+            else:  # half_even
+                fl = a >> shift
+                rem = a & ((1 << shift) - 1)
+                half = 1 << (shift - 1)
+                r = fl + (1 if (rem > half or (rem == half and fl & 1)) else 0)
+            ref.append(max(-128, min(127, r)))
+        np.testing.assert_array_equal(got, np.array(ref, np.int8))
+
+
+@given(shift=st.integers(0, 20),
+       vals=st.lists(st.integers(-(2**28), 2**28), min_size=1, max_size=64))
+@settings(**SETTINGS)
+def test_srs_monotone(shift, vals):
+    """SRS is monotone non-decreasing in the accumulator value."""
+    a = jnp.asarray(sorted(vals), jnp.int32)
+    y = np.asarray(srs(a, shift, "int8")).astype(np.int32)
+    assert (np.diff(y) >= 0).all()
+
+
+@given(st.lists(st.floats(-100, 100, allow_nan=False,
+                          allow_subnormal=False), min_size=1, max_size=64),
+       st.sampled_from(["int8", "int16"]))
+@settings(**SETTINGS)
+def test_quantize_error_bound(vals, dtype):
+    """Quantization error is bounded by half an LSB (when not saturating)."""
+    x = np.asarray([v if abs(v) > 1e-9 or v == 0 else 1e-9 for v in vals])
+    q = quantize(x, dtype)
+    deq = np.asarray(q.dequantize())
+    lsb = 2.0 ** (-q.shift)
+    lo, hi = INT_RANGE[dtype]
+    unsat = (x >= lo * lsb) & (x <= hi * lsb)
+    assert np.all(np.abs(deq - x)[unsat] <= 0.5 * lsb + 1e-12)
+
+
+@given(st.floats(0.01, 1000.0, allow_nan=False),
+       st.sampled_from(["int8", "int16"]))
+@settings(**SETTINGS)
+def test_choose_shift_maximal(amax, dtype):
+    """choose_shift picks the LARGEST shift that still represents amax
+    (values beyond the integer range saturate at shift 0)."""
+    from repro.quant.qtensor import MAX_SHIFT
+
+    s = choose_shift(np.asarray([amax]), dtype)
+    lo, hi = INT_RANGE[dtype]
+    if amax > hi:
+        assert s == 0  # saturating regime
+        return
+    assert amax * 2**s <= hi
+    if 0 < s < MAX_SHIFT:  # one more bit would overflow
+        assert amax * 2 ** (s + 1) > hi
+
+
+def test_requant_shift_chain():
+    assert requant_shift(7, 7, 7) == 7
+    assert requant_shift(7, 5, 3) == 9
+    with pytest.raises(ValueError):
+        requant_shift(2, 2, 8)  # would need a left shift
+
+
+def test_requantize_reduces_precision():
+    q = quantize(np.array([0.5, -0.25, 0.125]), "int8", shift=7)
+    q2 = requantize(q, 4, "int8")
+    assert q2.shift == 4
+    np.testing.assert_allclose(
+        np.asarray(q2.dequantize()), [0.5, -0.25, 0.125], atol=2**-4)
