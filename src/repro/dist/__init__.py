@@ -1,0 +1,35 @@
+"""Distributed execution: logical-axis sharding over TPU meshes.
+
+``repro.dist.sharding`` is the single place where logical axis names used
+throughout the layers/models ("batch", "act_heads", "fsdp", "cascade_in",
+...) are resolved to physical mesh axes ("pod", "data", "model"). See
+docs/sharding.md for the full API reference.
+"""
+
+from repro.dist.sharding import (
+    ParamSpec,
+    ShardingRules,
+    abstract_params,
+    current_ctx,
+    fit_pspec,
+    init_params,
+    logical_to_pspec,
+    rules_for_mode,
+    shard_act,
+    sharding_ctx,
+    specs_to_shardings,
+)
+
+__all__ = [
+    "ParamSpec",
+    "ShardingRules",
+    "abstract_params",
+    "current_ctx",
+    "fit_pspec",
+    "init_params",
+    "logical_to_pspec",
+    "rules_for_mode",
+    "shard_act",
+    "sharding_ctx",
+    "specs_to_shardings",
+]

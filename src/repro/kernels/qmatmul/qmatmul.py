@@ -37,6 +37,10 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.quant.srs import INT_RANGE
 
+# jax renamed TPUCompilerParams -> CompilerParams after 0.4.x; accept both
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
 _NEUTRAL = 0
 
 
@@ -153,7 +157,7 @@ def qmatmul_pallas(
         out_specs=pl.BlockSpec((MB_M, MB_N), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
         scratch_shapes=[pltpu.VMEM((MB_M, MB_N), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

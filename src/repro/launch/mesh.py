@@ -1,11 +1,23 @@
-"""Production mesh construction.
+"""Mesh construction: debug meshes for tests, production meshes for pods.
 
-A FUNCTION (not a module-level constant) so importing this module never
-touches jax device state. Single pod: 16x16 = 256 chips ("data", "model").
-Multi-pod: 2x16x16 = 512 chips ("pod", "data", "model") — the pod axis
-extends data parallelism across pods and is what the multi-pod dry-run
-proves out. Nothing in the step functions depends on the pod count, so the
-same config scales to N pods by growing the pod axis.
+Meshes are built by FUNCTIONS (not module-level constants) so importing
+this module never touches jax device state — `jax.devices()` locks the
+device count on first call, and entry points like the dry-run need to set
+``XLA_FLAGS`` first.
+
+Two production shapes (see docs/architecture.md §4):
+
+* single-pod: ``16x16 = 256`` chips, axes ``("data", "model")``;
+* multi-pod:  ``2x16x16 = 512`` chips, axes ``("pod", "data", "model")`` —
+  the pod axis extends data parallelism across pods and is what the
+  multi-pod dry-run proves out.
+
+Nothing in the step functions depends on the pod count: the sharding rule
+tables use composite ``("pod", "data")`` entries that degrade gracefully
+on the 2-axis mesh, so the same config scales to N pods by growing the
+pod axis. ``make_debug_mesh(data, model)`` builds the small test/example
+mesh over however many host devices exist (the 8-device integration tests
+use a 2x4).
 """
 
 from __future__ import annotations
@@ -18,6 +30,10 @@ from jax.sharding import Mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16x16 ("data", "model") mesh; 2x16x16 ("pod", "data", "model") with
+    ``multi_pod``. Raises RuntimeError when fewer devices exist (the
+    dry-run forces 512 host devices via XLA_FLAGS before importing jax).
+    """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     n = math.prod(shape)

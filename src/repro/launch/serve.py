@@ -1,7 +1,24 @@
 """Production serving launcher: batched autoregressive decode against
 resident KV-cache/SSM state (the paper's GEMV regime at pod scale).
 
+Default (production) path: 16x16 single-pod mesh (2x16x16 with
+--multi-pod), batch/context from the --shape ShapeSpec (default
+decode_32k: batch 128, context 32768). With --debug: a reduced config on
+a 1x1 host mesh with batch=2, context=64. Params and decode state are
+initialized sharded via specs_to_shardings, then greedy argmax decode
+runs --tokens steps with the state donated each step.
+
     PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --debug --tokens 8
+
+Flags:
+  --arch       architecture alias (required), e.g. yi-6b
+  --shape      production ShapeSpec name (default decode_32k); ignored
+               under --debug
+  --mode       sharding mode override: cascade | megatron | megatron_sp
+               (default: the config's sharding_mode)
+  --multi-pod  use the 2x16x16 ("pod","data","model") mesh
+  --debug      reduced config on a tiny local mesh
+  --tokens     tokens to decode per sequence (default 8)
 """
 
 from __future__ import annotations
@@ -24,12 +41,20 @@ from repro.models import SHAPES, build_model
 
 
 def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--shape", default="decode_32k")
-    ap.add_argument("--mode", default=None)
-    ap.add_argument("--multi-pod", action="store_true")
-    ap.add_argument("--debug", action="store_true")
+    ap = argparse.ArgumentParser(
+        description="Batched autoregressive decode against resident "
+                    "KV-cache/SSM state on a production or debug mesh.")
+    ap.add_argument("--arch", required=True,
+                    help="architecture alias, e.g. yi-6b")
+    ap.add_argument("--shape", default="decode_32k", choices=list(SHAPES),
+                    help="production ShapeSpec (ignored under --debug)")
+    ap.add_argument("--mode", default=None,
+                    choices=["cascade", "megatron", "megatron_sp"],
+                    help="sharding mode override (default: per-arch config)")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="2x16x16 (pod,data,model) mesh instead of 16x16")
+    ap.add_argument("--debug", action="store_true",
+                    help="reduced config on a tiny local mesh (batch=2)")
     ap.add_argument("--tokens", type=int, default=8,
                     help="tokens to decode per sequence")
     args = ap.parse_args()

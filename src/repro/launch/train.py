@@ -1,11 +1,27 @@
 """Production training launcher.
 
-On a TPU pod slice this builds the production mesh and runs the sharded
-train step from launch/steps.py; on this CPU container use --debug to run a
-reduced config on a small host mesh (the integration tests exercise the
-same path with 8 forced host devices).
+Default (production) path: build the 16x16 single-pod mesh — or the
+2x16x16 multi-pod mesh with --multi-pod — take the full architecture
+config and the --shape ShapeSpec, and run the restart-safe Trainer loop
+under sharding_ctx. With --debug: a reduced config on a 1x1 host mesh
+with seq=32, batch=4 (the 8-device integration tests exercise the same
+path on a 2x4 mesh).
 
     PYTHONPATH=src python -m repro.launch.train --arch yi-6b --debug --steps 20
+
+Flags:
+  --arch          architecture alias (required), e.g. yi-6b
+  --shape         production ShapeSpec name (default train_4k); ignored
+                  under --debug
+  --mode          sharding mode override: cascade | megatron | megatron_sp
+                  (default: the config's sharding_mode)
+  --multi-pod     use the 2x16x16 ("pod","data","model") mesh
+  --debug         reduced config on a tiny local mesh
+  --steps         training steps (default 50)
+  --ckpt-dir      checkpoint directory (resume is automatic from the
+                  newest checkpoint found there)
+  --microbatches  gradient-accumulation factor
+  --compress-grads  int8 error-feedback gradient compression
 """
 
 from __future__ import annotations
@@ -31,18 +47,28 @@ from repro.train.trainer import Trainer, TrainerConfig
 
 
 def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--shape", default="train_4k", choices=list(SHAPES))
+    ap = argparse.ArgumentParser(
+        description="Sharded training on a production or debug mesh with "
+                    "the restart-safe Trainer loop.")
+    ap.add_argument("--arch", required=True,
+                    help="architecture alias, e.g. yi-6b")
+    ap.add_argument("--shape", default="train_4k", choices=list(SHAPES),
+                    help="production ShapeSpec (ignored under --debug)")
     ap.add_argument("--mode", default=None,
-                    choices=["cascade", "megatron", "megatron_sp"])
-    ap.add_argument("--multi-pod", action="store_true")
+                    choices=["cascade", "megatron", "megatron_sp"],
+                    help="sharding mode override (default: per-arch config)")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="2x16x16 (pod,data,model) mesh instead of 16x16")
     ap.add_argument("--debug", action="store_true",
-                    help="reduced config on a tiny local mesh")
-    ap.add_argument("--steps", type=int, default=50)
-    ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_train")
-    ap.add_argument("--microbatches", type=int, default=1)
-    ap.add_argument("--compress-grads", action="store_true")
+                    help="reduced config on a tiny local mesh (seq=32, batch=4)")
+    ap.add_argument("--steps", type=int, default=50,
+                    help="training steps to run")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_train",
+                    help="checkpoint dir (resumes from the newest found)")
+    ap.add_argument("--microbatches", type=int, default=1,
+                    help="gradient-accumulation factor")
+    ap.add_argument("--compress-grads", action="store_true",
+                    help="int8 error-feedback gradient compression")
     args = ap.parse_args()
 
     if args.debug:
@@ -83,7 +109,12 @@ def main():
                                    start_step=start)
 
     _, _, hist = trainer.fit(params, opt_state, iters)
-    print(f"done: loss {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f}")
+    if hist:
+        print(f"done: loss {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f}")
+    else:
+        print(f"done: checkpoint in {args.ckpt_dir} is already at "
+              f">= {args.steps} steps; nothing to do (use a fresh "
+              "--ckpt-dir or raise --steps)")
 
 
 if __name__ == "__main__":

@@ -8,3 +8,33 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 # NOTE: do NOT set --xla_force_host_platform_device_count here — smoke tests
 # and benches must see 1 device. Multi-device integration tests spawn
 # subprocesses that set XLA_FLAGS themselves (see test_distributed.py).
+
+import pytest  # noqa: E402
+
+
+def hypothesis_or_skip_stub():
+    """Return (given, settings, st), real or stubbed.
+
+    With the ``hypothesis`` dev dependency installed this is the real
+    library; without it, ``@given(...)`` marks the test skipped (and the
+    ``st`` stand-in absorbs any strategy expression) so the rest of the
+    module's tests still collect and run.
+    """
+    try:
+        from hypothesis import given, settings, strategies as st
+        return given, settings, st
+    except ImportError:
+        class _AnyStrategy:
+            def __call__(self, *args, **kwargs):
+                return self
+
+            def __getattr__(self, name):
+                return self
+
+        def given(*args, **kwargs):
+            return pytest.mark.skip(reason="hypothesis not installed")
+
+        def settings(*args, **kwargs):
+            return lambda f: f
+
+        return given, settings, _AnyStrategy()

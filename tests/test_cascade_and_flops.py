@@ -1,7 +1,9 @@
 """Cascade resolution invariants + analytic MODEL_FLOPS accounting."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from conftest import hypothesis_or_skip_stub
+
+given, settings, st = hypothesis_or_skip_stub()
 
 from repro.configs import get_config
 from repro.core.cascade import cascade_grid_factor, resolve_cascade

@@ -153,7 +153,9 @@ def test_analytic_ceilings_match_paper_table1():
     assert dev.peak_gops("int16", "int16") == pytest.approx(160.0)
 
 
-from hypothesis import given, settings, strategies as st  # noqa: E402
+from conftest import hypothesis_or_skip_stub  # noqa: E402
+
+given, settings, st = hypothesis_or_skip_stub()
 
 
 @given(

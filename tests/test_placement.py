@@ -3,7 +3,9 @@
 import itertools
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from conftest import hypothesis_or_skip_stub
+
+given, settings, st = hypothesis_or_skip_stub()
 
 from repro.core.ir import PlacementSpec
 from repro.core.placement import Block, Placer, placement_cost

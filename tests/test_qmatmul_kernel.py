@@ -8,7 +8,9 @@ guarantee is asserted literally: array_equal, not allclose.
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from conftest import hypothesis_or_skip_stub
+
+given, settings, st = hypothesis_or_skip_stub()
 
 from repro.kernels.qmatmul.ops import qlinear
 from repro.kernels.qmatmul.ref import qlinear_ref

@@ -3,7 +3,9 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from conftest import hypothesis_or_skip_stub
+
+given, settings, st = hypothesis_or_skip_stub()
 
 from repro.quant.qtensor import QTensor, choose_shift, quantize, requantize
 from repro.quant.srs import INT_RANGE, requant_shift, saturate, srs
