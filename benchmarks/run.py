@@ -12,6 +12,7 @@ from benchmarks import (
     fig3_placement,
     fig4_scaling,
     roofline_table,
+    serve_latency,
     table1_ceilings,
     table2_single_kernel,
     table3_models,
@@ -28,6 +29,7 @@ MODULES = [
     ("table4", table4_frameworks),
     ("table5", table5_cross_device),
     ("roofline", roofline_table),
+    ("serve", serve_latency),
 ]
 
 

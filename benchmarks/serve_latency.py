@@ -1,0 +1,109 @@
+"""Warm-cache serving latency/throughput per bucket (debug mesh).
+
+Dispatches request waves through ``repro.serve.ServeBatcher`` on the
+1x1 debug mesh, drops the cold wave (compiles), and reports per-bucket
+warm tokens/sec plus p50/p99 dispatch latency. Run standalone to emit
+``BENCH_serve.json`` so future PRs have a perf trajectory to diff:
+
+    PYTHONPATH=src python -m benchmarks.serve_latency [--out BENCH_serve.json]
+
+Also exposes ``run()`` rows for the ``benchmarks.run`` CSV harness.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.configs import reduced_config
+from repro.launch.mesh import make_debug_mesh
+from repro.serve import DecodeRequest, ServeBatcher
+
+WAVES = 4          # warm waves measured (one cold wave discarded)
+TOKENS = 8         # generated per request
+ARCH = "yi_6b"
+
+
+def measure(waves: int = WAVES, tokens: int = TOKENS) -> dict:
+    cfg = reduced_config(ARCH).with_(n_layers=2, vocab=64)
+    mesh = make_debug_mesh(1, 1)
+    with mesh:
+        batcher = ServeBatcher(cfg, mesh).init_demo_params(seed=0)
+
+        def wave(tag: str):
+            for bucket in batcher.policy.buckets:
+                for i in range(bucket.batch):
+                    plen = 2 + (i % 3)
+                    batcher.submit(DecodeRequest(
+                        f"{tag}-{bucket.label}-{i}",
+                        [1 + (i + j) % 7 for j in range(plen)],
+                        max_new_tokens=tokens
+                        if bucket == batcher.policy.buckets[0]
+                        else bucket.max_len // 4))
+            batcher.run()
+
+        wave("cold")                      # compiles both executables/bucket
+        cold_cache = dict(batcher.cache.stats())
+        batcher.metrics = {}              # keep only warm-path numbers
+        for w in range(waves):
+            wave(f"warm{w}")
+
+    stats = batcher.stats()
+    buckets = {}
+    for label, m in stats["buckets"].items():
+        busy = m["prefill_seconds"] + m["decode_seconds"]
+        buckets[label] = dict(
+            m,
+            us_per_token=round(busy / m["new_tokens"] * 1e6, 3)
+            if m["new_tokens"] else 0.0,
+        )
+    return {
+        "arch": ARCH,
+        "waves": waves,
+        "tokens_per_request": tokens,
+        "cold_compiles": cold_cache["compiles"],
+        "warm_cache": stats["cache"],
+        "buckets": buckets,
+        "pool": stats["pool"],
+    }
+
+
+def run():
+    """Rows for the benchmarks.run CSV harness."""
+    data = measure(waves=2, tokens=4)
+    rows = []
+    for label, m in data["buckets"].items():
+        rows.append({
+            "name": f"serve_{label}",
+            "us_per_call": m["us_per_token"],
+            "derived": (f"{m['tokens_per_second']} tok/s; "
+                        f"p50 {m['p50_latency_s']}s; "
+                        f"p99 {m['p99_latency_s']}s; "
+                        f"hits {data['warm_cache']['hits']}"),
+        })
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser(
+        description="Warm-cache serve latency per bucket (debug mesh)")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--waves", type=int, default=WAVES)
+    ap.add_argument("--tokens", type=int, default=TOKENS)
+    args = ap.parse_args()
+    data = measure(waves=args.waves, tokens=args.tokens)
+    with open(args.out, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+        f.write("\n")
+    hits = data["warm_cache"]["hits"]
+    assert hits > 0, "warm waves never hit the executable cache"
+    for label, m in data["buckets"].items():
+        print(f"{label}: {m['tokens_per_second']} tok/s warm, "
+              f"p50 {m['p50_latency_s']}s p99 {m['p99_latency_s']}s, "
+              f"{m['us_per_token']} us/token")
+    print(f"wrote {args.out} (cache hits={hits}, "
+          f"compiles={data['warm_cache']['compiles']})")
+
+
+if __name__ == "__main__":
+    main()

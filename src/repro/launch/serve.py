@@ -1,14 +1,19 @@
-"""Production serving launcher: batched autoregressive decode against
-resident KV-cache/SSM state (the paper's GEMV regime at pod scale).
+"""Serving launcher: thin CLI over the ``repro.serve`` batching subsystem.
+
+The heavy lifting — shape buckets, the AOT compiled-executable cache,
+resident state pools, prefill->decode handoff — lives in
+``repro.serve.ServeBatcher``; this module only parses flags, builds the
+mesh/config, submits synthetic requests, and prints the counters. It
+dispatches ``--rounds`` request waves so the executable-cache hit counter
+is observable after the first wave (the CI smoke job asserts hits > 0 on
+the second).
 
 Default (production) path: 16x16 single-pod mesh (2x16x16 with
---multi-pod), batch/context from the --shape ShapeSpec (default
+--multi-pod), bucket shapes from the --shape ShapeSpec (default
 decode_32k: batch 128, context 32768). With --debug: a reduced config on
-a 1x1 host mesh with batch=2, context=64. Params and decode state are
-initialized sharded via specs_to_shardings, then greedy argmax decode
-runs --tokens steps with the state donated each step.
+a 1x1 host mesh with 2-sequence buckets.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --debug --tokens 8
+    PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --debug --tokens 4
 
 Flags:
   --arch       architecture alias (required), e.g. yi-6b
@@ -18,32 +23,45 @@ Flags:
                (default: the config's sharding_mode)
   --multi-pod  use the 2x16x16 ("pod","data","model") mesh
   --debug      reduced config on a tiny local mesh
-  --tokens     tokens to decode per sequence (default 8)
+  --tokens     tokens to decode per request (default 8, must be >= 1)
+  --quantized  route the decode LM head through the Pallas int8 qmatmul
+  --rounds     request waves to dispatch (default 2: warm + cache-hit)
 """
 
 from __future__ import annotations
 
 import argparse
-import time
-
-import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config, reduced_config
-from repro.dist.sharding import (
-    init_params,
-    rules_for_mode,
-    sharding_ctx,
-    specs_to_shardings,
-)
 from repro.launch.mesh import make_debug_mesh, make_production_mesh
-from repro.models import SHAPES, build_model
+from repro.models import SHAPES
+from repro.serve import BucketPolicy, DecodeRequest, ServeBatcher
+
+
+def build_batcher(args) -> ServeBatcher:
+    """Config + mesh + bucket policy -> a ServeBatcher with demo params."""
+    if args.debug:
+        cfg = reduced_config(args.arch)
+        mesh = make_debug_mesh(1, 1)
+        policy = BucketPolicy.debug()
+    else:
+        cfg = get_config(args.arch)
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+        shape = SHAPES[args.shape]
+        policy = BucketPolicy.production(shape.global_batch, shape.seq_len)
+    if args.mode:
+        cfg = cfg.with_(sharding_mode=args.mode)
+    batcher = ServeBatcher(cfg, mesh, quantized=args.quantized,
+                           policy=policy)
+    with mesh:
+        batcher.init_demo_params(seed=0)
+    return batcher
 
 
 def main():
     ap = argparse.ArgumentParser(
-        description="Batched autoregressive decode against resident "
-                    "KV-cache/SSM state on a production or debug mesh.")
+        description="Bucketed batch decode over AOT-cached executables "
+                    "and resident KV/SSM state pools.")
     ap.add_argument("--arch", required=True,
                     help="architecture alias, e.g. yi-6b")
     ap.add_argument("--shape", default="decode_32k", choices=list(SHAPES),
@@ -56,48 +74,45 @@ def main():
     ap.add_argument("--debug", action="store_true",
                     help="reduced config on a tiny local mesh (batch=2)")
     ap.add_argument("--tokens", type=int, default=8,
-                    help="tokens to decode per sequence")
+                    help="tokens to decode per request (>= 1)")
+    ap.add_argument("--quantized", action="store_true",
+                    help="int8 qmatmul decode LM head")
+    ap.add_argument("--rounds", type=int, default=2,
+                    help="request waves (2nd+ hit the executable cache)")
     args = ap.parse_args()
+    if args.tokens < 1:
+        ap.error("--tokens must be >= 1")
+    if args.rounds < 1:
+        ap.error("--rounds must be >= 1")
 
-    if args.debug:
-        cfg = reduced_config(args.arch)
-        mesh = make_debug_mesh(1, 1)
-        batch, max_len = 2, 64
-    else:
-        cfg = get_config(args.arch)
-        mesh = make_production_mesh(multi_pod=args.multi_pod)
-        shape = SHAPES[args.shape]
-        batch, max_len = shape.global_batch, shape.seq_len
-    if args.mode:
-        cfg = cfg.with_(sharding_mode=args.mode)
+    batcher = build_batcher(args)
+    batch = batcher.policy.buckets[0].batch
+    t_first = None
+    with batcher.mesh:
+        for wave in range(args.rounds):
+            for i in range(batch):
+                batcher.submit(DecodeRequest(
+                    f"w{wave}r{i}", [1 + (i + j) % 7 for j in range(i % 3 + 2)],
+                    max_new_tokens=args.tokens))
+            results = batcher.run()
+            if t_first is None and results:
+                t_first = min(r.prefill_seconds for r in results.values())
+            sample = results[sorted(results)[0]]
+            print(f"wave {wave}: {len(results)} requests x {args.tokens} "
+                  f"tokens, sample {sample.request_id} -> "
+                  f"{sample.tokens[:8]}")
 
-    rules = rules_for_mode(cfg.sharding_mode)
-    model = build_model(cfg)
-    with mesh, sharding_ctx(mesh, rules):
-        pspecs = model.param_specs()
-        params = jax.device_put(
-            init_params(jax.random.PRNGKey(0), pspecs),
-            specs_to_shardings(pspecs, mesh, rules))
-        sspecs = model.decode_state_specs(batch, max_len)
-        state = jax.device_put(
-            init_params(jax.random.PRNGKey(1), sspecs),
-            specs_to_shardings(sspecs, mesh, rules))
-        step = jax.jit(model.decode_step, donate_argnums=(1,))
-        tokens = jnp.ones((batch,), jnp.int32)
-        t_first = None
-        t0 = time.perf_counter()
-        for i in range(args.tokens):
-            logits, state = step(params, state, tokens, jnp.int32(i))
-            tokens = jnp.argmax(logits, -1).astype(jnp.int32)
-            if i == 0:
-                jax.block_until_ready(logits)
-                t_first = time.perf_counter() - t0
-        jax.block_until_ready(logits)
-        dt = time.perf_counter() - t0
-    print(f"{cfg.name}: decoded {args.tokens} tokens x {batch} seqs "
-          f"in {dt:.2f}s (first token {t_first:.2f}s, "
-          f"{args.tokens * batch / dt:.1f} tok/s host-sim)")
-    print("sample tokens:", jax.device_get(tokens)[:8])
+    stats = batcher.stats()
+    for label, m in stats["buckets"].items():
+        print(f"bucket {label}: {m['requests']} reqs, "
+              f"{m['new_tokens']} tokens, "
+              f"{m['tokens_per_second']:.1f} tok/s host-sim, "
+              f"p50 {m['p50_latency_s']:.3f}s p99 {m['p99_latency_s']:.3f}s")
+    c = stats["cache"]
+    first = f"{t_first:.2f}s" if t_first is not None else "n/a"
+    print(f"{batcher.cfg.name}: first token {first}; cache entries="
+          f"{c['entries']} hits={c['hits']} misses={c['misses']} "
+          f"lowerings={c['lowerings']} compiles={c['compiles']}")
 
 
 if __name__ == "__main__":

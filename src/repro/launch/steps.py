@@ -191,6 +191,65 @@ def make_serve_step(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh,
     )
 
 
+def make_prefill_decode_step(cfg: ArchConfig, batch: int, prefill_len: int,
+                             max_len: int, mesh: Mesh,
+                             mode: Optional[str] = None) -> LoweringBundle:
+    """Batched prefill that hands off to decode: scan ``decode_step`` over
+    a right-padded prompt block, teacher-forcing each sequence's prompt
+    tokens and switching to greedy generation the moment its prompt runs
+    out. All sequences stay position-synchronized, the KV/SSM state is
+    populated exactly as an unbatched decode would populate it (no pad
+    tokens ever enter the cache), and the returned state is ready for the
+    single-token serve step at position ``prefill_len``.
+
+    Inputs:  (params, state, prompt [B, P] int32, lengths [B] int32 >= 1)
+    Outputs: (tokens [B, P] int32, state) — ``tokens[b, i]`` is the greedy
+             prediction for position ``i + 1``; entries at ``i >=
+             lengths[b] - 1`` are generated tokens, earlier ones are
+             teacher-forced prompt echoes a batcher discards.
+    """
+    rules = rules_for_mode(mode or cfg.sharding_mode)
+    model = build_model(cfg)
+    pspecs = model.param_specs()
+    sspecs = model.decode_state_specs(batch, max_len)
+
+    def prefill_decode(params, state, prompt, lengths):
+        def body(carry, xs):
+            st, prev = carry
+            i, col = xs
+            tok = jnp.where(i < lengths, col, prev)
+            logits, st = model.decode_step(params, st, tok, i)
+            nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+            return (st, nxt), nxt
+
+        xs = (jnp.arange(prefill_len, dtype=jnp.int32),
+              jnp.swapaxes(prompt, 0, 1))
+        (state, _), toks = jax.lax.scan(body, (state, prompt[:, 0]), xs)
+        return jnp.swapaxes(toks, 0, 1), state
+
+    param_sh = specs_to_shardings(pspecs, mesh, rules)
+    state_sh = specs_to_shardings(sspecs, mesh, rules)
+    prompt_sh = NamedSharding(
+        mesh, fit_pspec((batch, prefill_len),
+                        logical_to_pspec(("batch", None), mesh, rules), mesh))
+    len_sh = NamedSharding(
+        mesh, fit_pspec((batch,),
+                        logical_to_pspec(("batch",), mesh, rules), mesh))
+    return LoweringBundle(
+        fn=prefill_decode,
+        in_shardings=(param_sh, state_sh, prompt_sh, len_sh),
+        out_shardings=(prompt_sh, state_sh),
+        abstract_inputs=(
+            abstract_params(pspecs), abstract_params(sspecs),
+            jax.ShapeDtypeStruct((batch, prefill_len), jnp.int32),
+            jax.ShapeDtypeStruct((batch,), jnp.int32),
+        ),
+        mesh=mesh,
+        rules=rules,
+        donate_argnums=(1,),
+    )
+
+
 def make_step(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh,
               mode: Optional[str] = None) -> LoweringBundle:
     if shape.kind == "train":

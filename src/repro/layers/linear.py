@@ -94,9 +94,17 @@ def quantized_linear(
     w_shift: int = 7,
     out_shift: int = 7,
     relu: bool = False,
+    out_dtype: str = "int8",
+    out_float_dtype=None,
 ):
     """Paper-faithful int8 path: quantize, run the fused Pallas kernel,
     dequantize. Used by the serving configs on TPU (interpret-mode on CPU).
+
+    ``out_dtype`` picks the kernel's SRS output width ("int8"/"int16" —
+    int16 keeps logit-grade resolution for the serve LM head);
+    ``out_float_dtype`` overrides the dequantized dtype (default: x.dtype).
+    Dequantization happens in fp32 before the final cast so an int16
+    result is not truncated through bf16's 8-bit mantissa.
     """
     from repro.kernels.qmatmul.ops import qlinear  # lazy: pallas import
     from repro.quant.srs import INT_RANGE
@@ -115,7 +123,8 @@ def quantized_linear(
     lead = xq.shape[:-1]
     y = qlinear(
         xq.reshape(-1, xq.shape[-1]), wq, bq,
-        shift=x_shift + w_shift - out_shift, relu=relu, out_dtype="int8",
+        shift=x_shift + w_shift - out_shift, relu=relu, out_dtype=out_dtype,
     )
     y = y.reshape(*lead, y.shape[-1])
-    return y.astype(x.dtype) * (2.0**-out_shift)
+    y = y.astype(jnp.float32) * (2.0**-out_shift)
+    return y.astype(out_float_dtype or x.dtype)

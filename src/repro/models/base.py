@@ -64,6 +64,7 @@ class ArchConfig:
     q_chunk: int = 512
     ssd_chunk: int = 128
     optimizer: str = "adamw"     # "adafactor" for the very large configs
+    quantized: bool = False      # serve: int8 qmatmul LM head (--quantized)
     notes: str = ""
 
     def with_(self, **kw) -> "ArchConfig":
@@ -133,6 +134,37 @@ def build_model(cfg: ArchConfig):
         from repro.models.hybrid import HybridModel
         return HybridModel(cfg)
     raise ValueError(f"unknown family {cfg.family}")
+
+
+# ---------------------------------------------------------------------------
+# Shared decode head: fp32 einsum, or the paper's int8 qmatmul path
+# ---------------------------------------------------------------------------
+
+
+def decode_head_logits(head_w: jnp.ndarray, x: jnp.ndarray,
+                       cfg: ArchConfig) -> jnp.ndarray:
+    """Final-token logits [B, V] from decode hiddens ``x`` [B, 1, d].
+
+    With ``cfg.quantized`` the projection routes through the Pallas
+    qmatmul kernel (int8 operands, int16 SRS output): the GEMV that
+    dominates the decode step is exactly the op the paper quantizes.
+    Shifts are sized to the observed ranges: rmsnorm'd activations (unit
+    RMS, absmax just under 4 -> x_shift 5) and fan-in-scaled head weights
+    (absmax just under 0.5 -> w_shift 8); out_shift 11 keeps ~5e-4 logit
+    resolution over a +-16 range. Greedy argmax matches the float path on
+    the debug configs; logit gaps below the ~0.05 quantization noise can
+    still flip — that is the int8 contract, not a bug.
+    """
+    if cfg.quantized:
+        from repro.layers.linear import quantized_linear
+
+        return quantized_linear(
+            {"w": head_w}, x[:, 0],
+            x_shift=5, w_shift=8, out_shift=11, out_dtype="int16",
+            out_float_dtype=jnp.float32,
+        )
+    return jnp.einsum("bsd,dv->bsv", x, head_w,
+                      preferred_element_type=jnp.float32)[:, 0]
 
 
 # ---------------------------------------------------------------------------

@@ -18,7 +18,13 @@ from repro.dist.sharding import ParamSpec, shard_act
 from repro.layers.embedding import embed, embedding_spec, lm_head_spec
 from repro.layers.norm import rmsnorm, rmsnorm_spec
 from repro.layers.ssm import mamba2, mamba2_decode, mamba2_spec
-from repro.models.base import ArchConfig, lm_loss_chunked, stackify, token_input_specs
+from repro.models.base import (
+    ArchConfig,
+    decode_head_logits,
+    lm_loss_chunked,
+    stackify,
+    token_input_specs,
+)
 from repro.models.blocks import attn_block, attn_block_decode, attn_block_spec
 
 
@@ -142,8 +148,7 @@ class HybridModel:
              state["cache_k"], state["cache_v"]),
         )
         x = rmsnorm(params["ln_f"], x)
-        logits = jnp.einsum("bsd,dv->bsv", x, params["head"]["w"],
-                            preferred_element_type=jnp.float32)[:, 0]
+        logits = decode_head_logits(params["head"]["w"], x, cfg)
         return logits, {"ssm": ssm, "conv": conv, "cache_k": ck,
                         "cache_v": cv}
 

@@ -20,7 +20,13 @@ from repro.layers.rwkv import (
     rwkv6_spec,
     rwkv6_time_mix,
 )
-from repro.models.base import ArchConfig, lm_loss_chunked, stackify, token_input_specs
+from repro.models.base import (
+    ArchConfig,
+    decode_head_logits,
+    lm_loss_chunked,
+    stackify,
+    token_input_specs,
+)
 
 
 class RWKVModel:
@@ -119,8 +125,7 @@ class RWKVModel:
              state["wkv"]),
         )
         x = layernorm(params["ln_f"], x)
-        logits = jnp.einsum("bsd,dv->bsv", x, params["head"]["w"],
-                            preferred_element_type=jnp.float32)[:, 0]
+        logits = decode_head_logits(params["head"]["w"], x, self.cfg)
         return logits, {"tm_prev": tm, "cm_prev": cm, "wkv": wkv}
 
     def input_specs(self, shape) -> Dict:

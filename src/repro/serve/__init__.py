@@ -1,0 +1,38 @@
+"""Serving subsystem: shape-bucketed batching over AOT compiled executables.
+
+Public surface:
+
+* :class:`~repro.serve.batcher.ServeBatcher` — admit
+  :class:`~repro.serve.batcher.DecodeRequest`s, dispatch bucketed groups
+  through cached prefill/decode executables.
+* :class:`~repro.serve.cache.ExecutableCache` — process-wide
+  ``lower().compile()`` cache with hit/miss/lowering/compile counters.
+* :class:`~repro.serve.state_pool.StatePool` — per-bucket resident
+  KV-cache/SSM state pools.
+
+See docs/serving.md for the bucket policy, cache keys, and lifecycle.
+"""
+
+from repro.serve.batcher import (
+    Bucket,
+    BucketMetrics,
+    BucketPolicy,
+    DecodeRequest,
+    RequestResult,
+    ServeBatcher,
+)
+from repro.serve.cache import CachedExecutable, CacheKey, ExecutableCache
+from repro.serve.state_pool import StatePool
+
+__all__ = [
+    "Bucket",
+    "BucketMetrics",
+    "BucketPolicy",
+    "CacheKey",
+    "CachedExecutable",
+    "DecodeRequest",
+    "ExecutableCache",
+    "RequestResult",
+    "ServeBatcher",
+    "StatePool",
+]

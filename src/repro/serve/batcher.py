@@ -1,0 +1,353 @@
+"""Request batcher: shape buckets, AOT executables, prefill->decode handoff.
+
+The serving hot path must run only code that was compiled ahead of time
+(ROADMAP open item #1). To make that possible with dynamic request sizes,
+the batcher quantizes every request group onto a small closed set of
+declared shape buckets:
+
+* a ``Bucket(batch, max_len)`` fixes the decode executable's shapes —
+  requests are padded up to the bucket batch with inert slots and their
+  KV/SSM capacity to ``max_len``;
+* the prompt block is padded to a power-of-two ``prefill_len`` (>= 8), so
+  each bucket owns at most log2(max_len) prefill executables.
+
+Dispatch then runs exactly two cached executables per group — one
+``make_prefill_decode_step`` scan that teacher-forces prompts straight
+into resident state while already generating for short sequences, and one
+``make_serve_step`` single-token step looped for the remaining tokens —
+both served from the process-wide :class:`ExecutableCache` and fed from
+the per-bucket :class:`StatePool`. After warmup a dispatch performs zero
+lowerings and zero compiles; the cache counters prove it.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Deque, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.dist.sharding import init_params, rules_for_mode, specs_to_shardings
+from repro.launch.steps import make_prefill_decode_step, make_serve_step
+from repro.models import build_model
+from repro.models.base import ArchConfig, ShapeSpec
+from repro.serve.cache import CachedExecutable, CacheKey, ExecutableCache
+from repro.serve.state_pool import StatePool
+
+_MIN_PREFILL = 8
+
+
+def _pow2ceil(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length() if n > 1 else 1
+
+
+@dataclasses.dataclass
+class DecodeRequest:
+    """One sequence to continue: prompt token ids + how many to generate."""
+
+    request_id: str
+    prompt: Sequence[int]
+    max_new_tokens: int = 8
+
+    def __post_init__(self):
+        self.prompt = [int(t) for t in self.prompt]
+        if not self.prompt:
+            raise ValueError(f"{self.request_id}: empty prompt")
+        if self.max_new_tokens < 1:
+            raise ValueError(
+                f"{self.request_id}: max_new_tokens must be >= 1")
+
+    @property
+    def need_len(self) -> int:
+        """KV positions this request can consume under bucket padding."""
+        return _pow2ceil(len(self.prompt)) + self.max_new_tokens
+
+
+@dataclasses.dataclass
+class RequestResult:
+    request_id: str
+    tokens: List[int]
+    bucket: str
+    prefill_seconds: float
+    total_seconds: float
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Bucket:
+    """One declared decode shape: padded batch x padded state capacity."""
+
+    max_len: int
+    batch: int
+
+    @property
+    def label(self) -> str:
+        return f"b{self.batch}xl{self.max_len}"
+
+
+class BucketPolicy:
+    """Smallest-fit over a closed, sorted set of buckets."""
+
+    def __init__(self, buckets: Sequence[Bucket]):
+        if not buckets:
+            raise ValueError("need at least one bucket")
+        for b in buckets:
+            # the prompt block is padded to >= _MIN_PREFILL positions, so
+            # a smaller capacity could overrun the KV/SSM state
+            if b.max_len <= _MIN_PREFILL:
+                raise ValueError(
+                    f"bucket {b.label}: max_len must exceed {_MIN_PREFILL}")
+            if b.batch < 1:
+                raise ValueError(f"bucket {b.label}: batch must be >= 1")
+        self.buckets = sorted(buckets)
+
+    @classmethod
+    def debug(cls) -> "BucketPolicy":
+        return cls([Bucket(64, 2), Bucket(256, 2)])
+
+    @classmethod
+    def production(cls, batch: int = 128, max_len: int = 32768
+                   ) -> "BucketPolicy":
+        # one decile of short-context buckets under the headline shape
+        return cls([Bucket(max_len // 8, batch), Bucket(max_len, batch)])
+
+    def bucket_for(self, need_len: int) -> Bucket:
+        for b in self.buckets:
+            if need_len <= b.max_len:
+                return b
+        raise ValueError(
+            f"request needs {need_len} positions; largest bucket holds "
+            f"{self.buckets[-1].max_len}")
+
+
+_LATENCY_WINDOW = 4096     # p50/p99 over the most recent N requests
+
+
+@dataclasses.dataclass
+class BucketMetrics:
+    dispatches: int = 0
+    requests: int = 0
+    padded_slots: int = 0
+    new_tokens: int = 0
+    prefill_seconds: float = 0.0
+    decode_seconds: float = 0.0
+    # bounded: a resident server must not grow one float per request
+    latencies: Deque[float] = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=_LATENCY_WINDOW))
+
+    def summary(self) -> Dict[str, float]:
+        lat = sorted(self.latencies)
+
+        def pct(p):
+            return lat[min(len(lat) - 1, int(p * len(lat)))] if lat else 0.0
+
+        busy = self.prefill_seconds + self.decode_seconds
+        return {
+            "dispatches": self.dispatches,
+            "requests": self.requests,
+            "padded_slots": self.padded_slots,
+            "new_tokens": self.new_tokens,
+            "prefill_seconds": round(self.prefill_seconds, 4),
+            "decode_seconds": round(self.decode_seconds, 4),
+            "p50_latency_s": round(pct(0.50), 4),
+            "p99_latency_s": round(pct(0.99), 4),
+            "tokens_per_second": round(self.new_tokens / busy, 2)
+            if busy else 0.0,
+        }
+
+
+class ServeBatcher:
+    """Admit DecodeRequests, dispatch bucketed groups on AOT executables.
+
+    The batcher owns the sharded parameters, the executable cache, and the
+    state pool; ``submit`` enqueues, ``run`` drains the queue FIFO and
+    returns per-request results. ``cfg.sharding_mode`` picks the rule
+    table; pass ``quantized=True`` to route the decode LM head through the
+    Pallas int8 qmatmul path (separately keyed in the cache).
+    """
+
+    def __init__(self, cfg: ArchConfig, mesh: Mesh, *,
+                 quantized: bool = False,
+                 policy: Optional[BucketPolicy] = None,
+                 cache: Optional[ExecutableCache] = None):
+        self.cfg = cfg.with_(quantized=quantized) if quantized else cfg
+        self.mesh = mesh
+        self.rules = rules_for_mode(self.cfg.sharding_mode)
+        self.model = build_model(self.cfg)
+        self.policy = policy or BucketPolicy.debug()
+        self.cache = cache or ExecutableCache()
+        self.pool = StatePool(self.model, mesh, self.rules)
+        self.params = None
+        self.metrics: Dict[str, BucketMetrics] = {}
+        self._pending: Deque[DecodeRequest] = collections.deque()
+        self._argmax_fns: Dict[str, object] = {}
+
+    # -- parameters -----------------------------------------------------------
+
+    def load_params(self, params) -> "ServeBatcher":
+        """Install (and shard) an existing parameter pytree."""
+        self.params = jax.device_put(
+            params,
+            specs_to_shardings(self.model.param_specs(), self.mesh,
+                               self.rules))
+        return self
+
+    def init_demo_params(self, seed: int = 0) -> "ServeBatcher":
+        """Random sharded parameters (CLI demos, benchmarks, tests)."""
+        return self.load_params(
+            init_params(jax.random.PRNGKey(seed), self.model.param_specs()))
+
+    # -- admission ------------------------------------------------------------
+
+    def submit(self, request: DecodeRequest) -> str:
+        self.policy.bucket_for(request.need_len)   # reject unservable now
+        self._pending.append(request)
+        return request.request_id
+
+    def warmup(self, bucket: Bucket, prompt_len: int = 1) -> None:
+        """Compile a bucket's executables ahead of traffic."""
+        self._executable("prefill", bucket, self._prefill_len(prompt_len))
+        self._executable("decode", bucket, 0)
+
+    # -- dispatch -------------------------------------------------------------
+
+    def run(self) -> Dict[str, RequestResult]:
+        """Drain the queue: group -> dispatch until empty."""
+        if self.params is None:
+            raise RuntimeError("no parameters loaded "
+                               "(load_params / init_demo_params)")
+        results: Dict[str, RequestResult] = {}
+        while self._pending:
+            group, bucket = self._form_group()
+            for res in self._dispatch(group, bucket):
+                results[res.request_id] = res
+        return results
+
+    def _form_group(self):
+        """FIFO head picks the bucket; fill with queued requests that fit."""
+        first = self._pending.popleft()
+        bucket = self.policy.bucket_for(first.need_len)
+        group = [first]
+        kept: Deque[DecodeRequest] = collections.deque()
+        while self._pending and len(group) < bucket.batch:
+            req = self._pending.popleft()
+            if req.need_len <= bucket.max_len:
+                group.append(req)
+            else:
+                kept.append(req)
+        kept.extend(self._pending)
+        self._pending = kept
+        return group, bucket
+
+    def _prefill_len(self, max_prompt: int) -> int:
+        return max(_MIN_PREFILL, _pow2ceil(max_prompt))
+
+    def _executable(self, kind: str, bucket: Bucket,
+                    prefill_len: int) -> CachedExecutable:
+        key = CacheKey(
+            arch=self.cfg.name, kind=kind, batch=bucket.batch,
+            max_len=bucket.max_len, prefill_len=prefill_len,
+            mode=self.cfg.sharding_mode,
+            mesh_axes=CacheKey.mesh_signature(self.mesh),
+            quantized=self.cfg.quantized,
+        )
+        if kind == "decode":
+            shape = ShapeSpec(bucket.label, bucket.max_len, bucket.batch,
+                              "decode")
+            build = lambda: make_serve_step(self.cfg, shape, self.mesh)  # noqa: E731
+        else:
+            build = lambda: make_prefill_decode_step(  # noqa: E731
+                self.cfg, bucket.batch, prefill_len, bucket.max_len,
+                self.mesh)
+        return self.cache.get_or_build(key, build)
+
+    def _argmax(self, bucket: Bucket, tok_sharding):
+        fn = self._argmax_fns.get(bucket.label)
+        if fn is None:
+            fn = jax.jit(lambda l: jnp.argmax(l, -1).astype(jnp.int32),
+                         out_shardings=tok_sharding)
+            self._argmax_fns[bucket.label] = fn
+        return fn
+
+    def _dispatch(self, group: List[DecodeRequest],
+                  bucket: Bucket) -> List[RequestResult]:
+        t0 = time.perf_counter()
+        B, P = bucket.batch, self._prefill_len(
+            max(len(r.prompt) for r in group))
+        prefill = self._executable("prefill", bucket, P)
+        decode = self._executable("decode", bucket, 0)
+
+        prompt = np.zeros((B, P), np.int32)
+        lengths = np.ones((B,), np.int32)       # inert slots: 1-token prompt
+        for slot, req in enumerate(group):
+            prompt[slot, :len(req.prompt)] = req.prompt
+            lengths[slot] = len(req.prompt)
+
+        _, _, prompt_sh, len_sh = prefill.bundle.in_shardings
+        state = self.pool.acquire(B, bucket.max_len)
+        tok_out, state = prefill.compiled(
+            self.params, state,
+            jax.device_put(prompt, prompt_sh),
+            jax.device_put(lengths, len_sh))
+        jax.block_until_ready(tok_out)
+        t_prefill = time.perf_counter() - t0
+        prefill_np = np.asarray(jax.device_get(tok_out))     # [B, P]
+
+        # decode loop: everyone continues from position P in lockstep
+        steps = max((r.max_new_tokens - (P - len(r.prompt) + 1)
+                     for r in group), default=0)
+        steps = max(steps, 0)
+        tok_sh = decode.bundle.in_shardings[2]
+        pos_sh = decode.bundle.in_shardings[3]
+        argmax = self._argmax(bucket, tok_sh)
+        last = jax.device_put(tok_out[:, -1], tok_sh)
+        decoded = []
+        for t in range(steps):
+            logits, state = decode.compiled(
+                self.params, state, last,
+                jax.device_put(np.int32(P + t), pos_sh))
+            last = argmax(logits)
+            decoded.append(last)
+        if decoded:
+            jax.block_until_ready(decoded[-1])
+        decoded_np = (np.stack([np.asarray(jax.device_get(t))
+                                for t in decoded], axis=1)
+                      if decoded else np.zeros((B, 0), np.int32))
+        self.pool.release(B, bucket.max_len, state)
+        t_total = time.perf_counter() - t0
+
+        results = []
+        for slot, req in enumerate(group):
+            li = len(req.prompt)
+            gen = np.concatenate(
+                [prefill_np[slot, li - 1:], decoded_np[slot]])
+            results.append(RequestResult(
+                request_id=req.request_id,
+                tokens=[int(t) for t in gen[:req.max_new_tokens]],
+                bucket=bucket.label,
+                prefill_seconds=t_prefill,
+                total_seconds=t_total,
+            ))
+
+        m = self.metrics.setdefault(bucket.label, BucketMetrics())
+        m.dispatches += 1
+        m.requests += len(group)
+        m.padded_slots += B - len(group)
+        m.new_tokens += sum(len(r.tokens) for r in results)
+        m.prefill_seconds += t_prefill
+        m.decode_seconds += t_total - t_prefill
+        m.latencies.extend([t_total] * len(group))
+        return results
+
+    # -- observability --------------------------------------------------------
+
+    def stats(self) -> Dict[str, object]:
+        return {
+            "cache": self.cache.stats(),
+            "pool": self.pool.stats(),
+            "buckets": {k: m.summary() for k, m in self.metrics.items()},
+        }

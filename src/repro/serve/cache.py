@@ -1,0 +1,153 @@
+"""AOT compiled-executable cache for the serving layer.
+
+The paper's serving regime never compiles on the hot path: every step the
+array runs was scheduled ahead of time, and sustained throughput comes
+from reusing those schedules across requests (DPUV4E makes the same
+argument at the architecture level). Here the unit of reuse is a fully
+lowered+compiled XLA executable produced by a ``LoweringBundle`` from
+``repro.launch.steps``; this module holds them in a process-wide map keyed
+by everything that changes the program:
+
+    (arch, kind, batch, max_len, prefill_len, mode, mesh axes, quantized)
+
+``ExecutableCache.get_or_build`` is the only entry point. On a miss it
+calls the supplied builder (``make_serve_step(...)`` /
+``make_prefill_decode_step(...)``), runs ``.lower().compile()`` exactly
+once, and records the cost; on a hit it returns the resident executable
+untouched. The ``hits`` / ``misses`` / ``lowerings`` / ``compiles``
+counters exist so tests and benchmarks can assert the hot path performs
+ZERO new lowerings after warmup — the acceptance bar for this subsystem.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+from jax.sharding import Mesh
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheKey:
+    """Identity of one compiled step executable.
+
+    ``prefill_len`` is 0 for pure decode steps; ``mesh_axes`` pins both
+    the axis names and sizes (a 2x4 and a 4x2 mesh compile differently).
+    """
+
+    arch: str
+    kind: str                      # "decode" | "prefill"
+    batch: int
+    max_len: int
+    prefill_len: int
+    mode: str
+    mesh_axes: Tuple[Tuple[str, int], ...]
+    quantized: bool = False
+
+    @staticmethod
+    def mesh_signature(mesh: Mesh) -> Tuple[Tuple[str, int], ...]:
+        return tuple(zip(mesh.axis_names, mesh.devices.shape))
+
+
+@dataclasses.dataclass
+class CachedExecutable:
+    """A resident executable plus the bundle it was compiled from.
+
+    The bundle is kept for its shardings (dispatch uses them to place
+    host inputs) — never re-lowered.
+    """
+
+    key: CacheKey
+    bundle: Any                    # LoweringBundle
+    compiled: Any                  # jax.stages.Compiled
+    compile_seconds: float
+
+
+class ExecutableCache:
+    """Thread-safe map CacheKey -> CachedExecutable with reuse counters."""
+
+    def __init__(self, max_entries: Optional[int] = None):
+        self._lock = threading.Lock()
+        self._entries: Dict[CacheKey, CachedExecutable] = {}
+        self._building: Dict[CacheKey, threading.Event] = {}
+        self.max_entries = max_entries
+        self.hits = 0
+        self.misses = 0
+        self.lowerings = 0
+        self.compiles = 0
+        self.evictions = 0
+        self.compile_seconds = 0.0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: CacheKey) -> bool:
+        return key in self._entries
+
+    def get_or_build(
+        self, key: CacheKey, build: Callable[[], Any]
+    ) -> CachedExecutable:
+        """Return the executable for ``key``, compiling it on first use.
+
+        ``build`` returns a LoweringBundle; it is only invoked on a miss.
+        The global lock guards only the maps and counters — lowering and
+        compiling happen outside it, so a warm bucket's hit never queues
+        behind another bucket's minutes-long cold compile. Concurrent
+        misses on the *same* key wait on a per-key event instead of
+        compiling twice.
+        """
+        while True:
+            with self._lock:
+                entry = self._entries.get(key)
+                if entry is not None:
+                    self.hits += 1
+                    return entry
+                pending = self._building.get(key)
+                if pending is None:
+                    self._building[key] = threading.Event()
+                    self.misses += 1
+                    break
+            # someone else is compiling this key: wait, then re-check —
+            # on their failure the retry loop makes us the builder
+            pending.wait()
+        try:
+            bundle = build()
+            t0 = time.perf_counter()
+            lowered = bundle.lower()
+            compiled = lowered.compile()
+            dt = time.perf_counter() - t0
+            entry = CachedExecutable(key, bundle, compiled, dt)
+            with self._lock:
+                self.lowerings += 1
+                self.compiles += 1
+                self.compile_seconds += dt
+                if self.max_entries is not None and \
+                        len(self._entries) >= self.max_entries:
+                    # FIFO eviction: serving uses a small closed set of
+                    # buckets, so reaching here means the policy is wrong —
+                    # evict the oldest and keep counting so callers notice.
+                    oldest = next(iter(self._entries))
+                    del self._entries[oldest]
+                    self.evictions += 1
+                self._entries[key] = entry
+            return entry
+        finally:
+            with self._lock:
+                self._building.pop(key).set()
+
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "entries": len(self._entries),
+            "hits": self.hits,
+            "misses": self.misses,
+            "lowerings": self.lowerings,
+            "compiles": self.compiles,
+            "evictions": self.evictions,
+            "compile_seconds": round(self.compile_seconds, 3),
+        }
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()

@@ -1,0 +1,114 @@
+"""Per-bucket resident decode-state pools (KV cache / SSM state).
+
+Allocating a fresh sharded KV cache per request costs a device_put of the
+largest tensors in the serving path; the paper's on-chip regime instead
+keeps state RESIDENT and re-initializes it in place. ``StatePool`` does
+the host-mesh equivalent: one pool of state pytrees per shape bucket,
+acquired zeroed at dispatch and released back after the request group
+completes. Reuse zeroes through a donated jitted reset, so the released
+buffers are recycled rather than reallocated.
+
+Lifecycle per dispatch:
+
+    state = pool.acquire(batch, max_len)    # zeroed, sharded, resident
+    ... prefill / decode executables consume+donate it ...
+    pool.release(batch, max_len, final_state)
+
+The step executables donate their state argument, so the pytree handed
+back by ``release`` is a *different* buffer than the one acquired — the
+pool only tracks counts per bucket, never object identity.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.dist.sharding import ShardingRules, init_params, specs_to_shardings
+
+BucketShape = Tuple[int, int]        # (batch, max_len)
+
+
+@dataclasses.dataclass
+class _BucketPool:
+    free: List[Any]
+    created: int = 0
+    reused: int = 0
+    in_use: int = 0
+
+
+class StatePool:
+    """Pools of decode-state pytrees, one per (batch, max_len) bucket."""
+
+    def __init__(self, model, mesh: Mesh, rules: ShardingRules):
+        self.model = model
+        self.mesh = mesh
+        self.rules = rules
+        self._lock = threading.Lock()
+        self._pools: Dict[BucketShape, _BucketPool] = {}
+        self._reset_fns: Dict[BucketShape, Any] = {}
+
+    def _pool(self, bucket: BucketShape) -> _BucketPool:
+        if bucket not in self._pools:
+            self._pools[bucket] = _BucketPool(free=[])
+        return self._pools[bucket]
+
+    def _fresh(self, bucket: BucketShape):
+        batch, max_len = bucket
+        sspecs = self.model.decode_state_specs(batch, max_len)
+        return jax.device_put(
+            init_params(jax.random.PRNGKey(0), sspecs),
+            specs_to_shardings(sspecs, self.mesh, self.rules),
+        )
+
+    def _reset(self, bucket: BucketShape, state):
+        """Zero a released state in place (buffers donated and recycled)."""
+        fn = self._reset_fns.get(bucket)
+        if fn is None:
+            fn = jax.jit(
+                lambda s: jax.tree.map(jnp.zeros_like, s), donate_argnums=0
+            )
+            self._reset_fns[bucket] = fn
+        return fn(state)
+
+    def acquire(self, batch: int, max_len: int):
+        """A zeroed state pytree for the bucket, reusing released buffers."""
+        bucket = (batch, max_len)
+        with self._lock:
+            pool = self._pool(bucket)
+            if pool.free:
+                state = pool.free.pop()
+                pool.reused += 1
+                pool.in_use += 1
+            else:
+                state = None
+                pool.created += 1
+                pool.in_use += 1
+        # build/zero outside the lock: both can take device time
+        if state is None:
+            return self._fresh(bucket)
+        return self._reset(bucket, state)
+
+    def release(self, batch: int, max_len: int, state) -> None:
+        bucket = (batch, max_len)
+        with self._lock:
+            pool = self._pool(bucket)
+            pool.free.append(state)
+            pool.in_use = max(0, pool.in_use - 1)
+
+    def stats(self) -> Dict[str, Dict[str, int]]:
+        with self._lock:
+            return {
+                f"{b}x{m}": {
+                    "created": p.created,
+                    "reused": p.reused,
+                    "in_use": p.in_use,
+                    "free": len(p.free),
+                }
+                for (b, m), p in sorted(self._pools.items())
+            }

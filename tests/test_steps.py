@@ -9,7 +9,12 @@ import pytest
 
 from repro.configs import reduced_config
 from repro.launch.mesh import make_debug_mesh
-from repro.launch.steps import make_prefill_step, make_serve_step, make_train_step
+from repro.launch.steps import (
+    make_prefill_decode_step,
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+)
 from repro.models.base import ShapeSpec
 
 SMOKE_TRAIN = ShapeSpec("t", 32, 4, "train")
@@ -41,6 +46,23 @@ def test_prefill_and_serve_lower_per_family(arch):
     cfg = reduced_config(arch)
     mesh = make_debug_mesh(1, 1)
     make_prefill_step(cfg, SMOKE_PREFILL, mesh).lower().compile()
+    make_serve_step(cfg, SMOKE_DECODE, mesh).lower().compile()
+
+
+@pytest.mark.parametrize("arch", ["yi_6b", "zamba2_2_7b", "rwkv6_7b"])
+def test_prefill_decode_step_lowers_per_family(arch):
+    cfg = reduced_config(arch).with_(vocab=64)
+    mesh = make_debug_mesh(1, 1)
+    bundle = make_prefill_decode_step(cfg, batch=2, prefill_len=8,
+                                      max_len=32, mesh=mesh)
+    assert bundle.lower().compile().cost_analysis() is not None
+
+
+def test_quantized_serve_step_lowers():
+    """cfg.quantized routes the decode LM head through the qmatmul kernel
+    and must still lower/compile AOT like the float path."""
+    cfg = reduced_config("yi_6b").with_(n_layers=2, vocab=64, quantized=True)
+    mesh = make_debug_mesh(1, 1)
     make_serve_step(cfg, SMOKE_DECODE, mesh).lower().compile()
 
 
