@@ -16,8 +16,8 @@ import argparse
 import json
 
 from repro.configs import reduced_config
-from repro.launch.mesh import make_debug_mesh
-from repro.serve import DecodeRequest, ServeBatcher
+from repro.plan import MeshSpec, build_plan
+from repro.serve import DecodeRequest
 
 WAVES = 4          # warm waves measured (one cold wave discarded)
 TOKENS = 8         # generated per request
@@ -26,9 +26,9 @@ ARCH = "yi_6b"
 
 def measure(waves: int = WAVES, tokens: int = TOKENS) -> dict:
     cfg = reduced_config(ARCH).with_(n_layers=2, vocab=64)
-    mesh = make_debug_mesh(1, 1)
-    with mesh:
-        batcher = ServeBatcher(cfg, mesh).init_demo_params(seed=0)
+    plan = build_plan(cfg, None, mesh_spec=MeshSpec.debug(1, 1))
+    with plan.activate():
+        batcher = plan.make_batcher().init_demo_params(seed=0)
 
         def wave(tag: str):
             for bucket in batcher.policy.buckets:

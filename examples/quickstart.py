@@ -1,44 +1,61 @@
-"""Quickstart: compile a quantized MLP through the AIE4ML pipeline and run
-bit-exact inference in both simulation modes.
+"""Quickstart: ONE entry point — ``repro.plan.build_plan`` — takes a model
+description to placed, sharded, AOT-compiled executables, exactly like the
+paper's Fig. 2 pipeline takes a network to placed firmware.
+
+The plan's pass pipeline (ResolveMesh -> ResolveSharding -> PlaceStages ->
+Quantize -> Compile) decides the mesh, the per-parameter PartitionSpecs,
+the pipeline-stage placement, and the executable cache keys; launchers and
+this example are thin consumers.
 
     PYTHONPATH=src python examples/quickstart.py
+
+(For the paper's original small-graph compiler — the bit-exact quantized
+MLP flow — see examples/roofline_demo.py and examples/placement_explorer.py,
+which drive ``repro.core`` directly.)
 """
 
-import numpy as np
+import jax.numpy as jnp
 
-from repro.core import CompileConfig, DenseSpec, build_mlp_graph, compile_graph
+from repro.configs import reduced_config
+from repro.models.base import ShapeSpec
+from repro.plan import MeshSpec, build_plan
+from repro.serve import DecodeRequest
 
 
 def main():
-    rng = np.random.default_rng(0)
+    # 1. Describe the run: a reduced decoder LM, a tiny train shape, the
+    #    1x1 debug mesh. build_plan runs the whole pass pipeline.
+    cfg = reduced_config("yi_6b").with_(n_layers=2, vocab=128)
+    plan = build_plan(cfg, ShapeSpec("quickstart", 32, 4, "train"),
+                      mesh_spec=MeshSpec.debug(1, 1))
 
-    # 1. Describe the network (the hls4ml-frontend role): a small jet-tagging
-    #    style MLP with fused ReLU layers.
-    layers = [
-        DenseSpec(64, activation="relu", bias=rng.standard_normal(64) * 0.1),
-        DenseSpec(32, activation="relu", bias=rng.standard_normal(32) * 0.1),
-        DenseSpec(5),
-    ]
-    graph = build_mlp_graph(batch=16, f_in=16, layers=layers, seed=1)
+    # 2. Inspect what each pass decided.
+    d = plan.describe()
+    print(f"plan: {d['arch']} mode={d['mode']} mesh={d['mesh']}")
+    for p in d["passes"]:
+        print(f"  {p['pass']}: " + ", ".join(
+            f"{k}={v}" for k, v in p.items() if k != "pass"))
 
-    # 2. Compile: Lower -> Quantize -> Resolve -> Pack -> GraphPlan -> Place
-    #    -> Emit. Calibration data drives the activation binary points.
-    x = rng.uniform(-1, 1, (16, 16)).astype(np.float32)
-    model = compile_graph(graph, CompileConfig(calib=x))
+    # 3. Train: the plan shards params/optimizer state and compiles the
+    #    train step AOT through the shared executable cache.
+    params, opt_state = plan.init_train_state(seed=0)
+    step = plan.executable("train")
+    batch = {"tokens": jnp.ones((4, 32), jnp.int32),
+             "labels": jnp.ones((4, 32), jnp.int32)}
+    for i in range(3):
+        params, opt_state, metrics = step.compiled(params, opt_state, batch)
+        print(f"train step {i}: loss {float(metrics['loss']):.4f}")
 
-    # 3. Inspect the generated design.
-    print(f"tiles used:        {model.tiles_used} / 304")
-    print(f"memtile bytes:     {model.memtile_bytes}")
-    print(f"placement cost J:  {model.placement_cost:.2f}")
-    for name, (c, r, w, h) in model.placements().items():
-        print(f"  {name:10s} at col={c:2d} row={r} size {w}x{h}")
-
-    # 4. Run inference: x86 functional sim vs AIE (Pallas kernel) sim.
-    y_x86 = model.predict(x, mode="x86")
-    y_aie = model.predict(x, mode="aie")
-    assert np.array_equal(y_x86, y_aie), "modes must be bit-exact"
-    print(f"\npredict() bit-exact across modes: True")
-    print(f"outputs[0]: {y_x86[0].round(3)}")
+    # 4. Serve from the SAME plan API: a serve plan builds per-bucket
+    #    decode/prefill executables behind the same cache counters.
+    splan = build_plan(cfg, None, mesh_spec=MeshSpec.debug(1, 1))
+    batcher = splan.make_batcher()
+    with splan.activate():
+        batcher.init_demo_params(seed=0)
+        batcher.submit(DecodeRequest("demo", [1, 2, 3], max_new_tokens=6))
+        results = batcher.run()
+    print(f"decode: {results['demo'].tokens}")
+    print(f"cache counters: {splan.stats()}")
 
 
 if __name__ == "__main__":

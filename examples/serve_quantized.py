@@ -1,61 +1,72 @@
-"""End-to-end serving driver (the paper's deployment scenario): compile the
-paper's 7-layer MLP and serve batched requests, reporting sustained
-throughput and per-batch latency in both simulation modes.
+"""Quantized serving through the plan API (the paper's deployment
+scenario at the framework level): ONE ``build_plan`` call decides the
+mesh, the sharding rules, and the int8 quantization — the decode LM head
+and the a16w8 MLP down-projection both route through the Pallas qmatmul
+kernel, with shifts calibrated from the loaded weights by the plan's
+Quantize pass — then serves batched requests from AOT-cached executables.
 
-    PYTHONPATH=src python examples/serve_quantized.py [--batches 20] [--batch 64]
+    PYTHONPATH=src python examples/serve_quantized.py [--waves 3] [--tokens 6]
 """
 
 import argparse
 import time
 
-import numpy as np
-
-from repro.core import CompileConfig, DenseSpec, build_mlp_graph, compile_graph
+from repro.configs import reduced_config
+from repro.plan import MeshSpec, build_plan
+from repro.serve import DecodeRequest
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--batches", type=int, default=20)
-    ap.add_argument("--batch", type=int, default=64)
-    ap.add_argument("--width", type=int, default=512)
-    ap.add_argument("--depth", type=int, default=7)
+    ap.add_argument("--arch", default="yi-6b")
+    ap.add_argument("--waves", type=int, default=3)
+    ap.add_argument("--tokens", type=int, default=6)
     args = ap.parse_args()
 
-    rng = np.random.default_rng(0)
-    layers = [
-        DenseSpec(args.width, activation="relu",
-                  bias=rng.standard_normal(args.width) * 0.05)
-        for _ in range(args.depth)
-    ]
-    graph = build_mlp_graph(batch=args.batch, f_in=args.width, layers=layers,
-                            seed=11)
-    calib = rng.uniform(-1, 1, (args.batch, args.width)).astype(np.float32)
-    model = compile_graph(graph, CompileConfig(calib=calib))
-    print(f"compiled {args.depth}x{args.width} MLP: {model.tiles_used} tiles, "
-          f"J={model.placement_cost:.2f}")
+    cfg = reduced_config(args.arch)     # the registry resolves aliases
 
-    # modeled AIE-ML steady-state rate for context
-    cyc = model.estimated_cycles(batch=args.batch)
-    print(f"modeled AIE-ML interval: "
-          f"{cyc / 1.25e9 / args.batch * 1e6:.3f} us/sample")
+    # float reference plan and quantized plan, side by side
+    plan_f = build_plan(cfg, None, mesh_spec=MeshSpec.debug(1, 1))
+    plan_q = build_plan(cfg, None, mesh_spec=MeshSpec.debug(1, 1),
+                        quantized=True)
 
-    for mode in ("x86", "aie"):
-        # warmup (jit)
-        model.predict(calib, mode=mode)
+    bf = plan_f.make_batcher()
+    bq = plan_q.make_batcher()
+    with plan_f.activate():
+        bf.init_demo_params(seed=0)
+    with plan_q.activate():
+        bq.init_demo_params(seed=0)       # calibrates the MLP shifts
+    q = plan_q.describe()["quant"]
+    print(f"quantized plan: head_shifts={q['head_shifts']} "
+          f"mlp_shifts={q['mlp_shifts']} calibrated={q['calibrated']}")
+
+    prompts = [[7, 3], [2, 3, 4], [6, 2, 8], [2, 4, 8, 16]]
+    agree = total = 0
+    for wave in range(args.waves):
         t0 = time.perf_counter()
-        n = 0
-        for i in range(args.batches):
-            x = rng.uniform(-1, 1, (args.batch, args.width)).astype(np.float32)
-            y = model.predict(x, mode=mode)
-            n += len(y)
+        for batcher, tag in ((bf, "f"), (bq, "q")):
+            with batcher.plan.activate():
+                for i, p in enumerate(prompts[:2]):
+                    batcher.submit(DecodeRequest(
+                        f"{tag}{wave}-{i}", p, max_new_tokens=args.tokens))
+        with plan_f.activate():
+            rf = bf.run()
+        with plan_q.activate():
+            rq = bq.run()
         dt = time.perf_counter() - t0
-        print(f"mode={mode:4s}: {n/dt:8.1f} samples/s host-sim "
-              f"({dt/args.batches*1e3:.1f} ms/batch)")
+        for i in range(2):
+            a = rf[f"f{wave}-{i}"].tokens
+            b = rq[f"q{wave}-{i}"].tokens
+            agree += sum(x == y for x, y in zip(a, b))
+            total += len(a)
+        print(f"wave {wave}: {dt*1e3:.0f} ms, sample float {a[:6]} "
+              f"vs int8 {b[:6]}")
 
-    # bit-exactness spot check under serving traffic
-    x = rng.uniform(-1, 1, (args.batch, args.width)).astype(np.float32)
-    assert np.array_equal(model.predict(x, "x86"), model.predict(x, "aie"))
-    print("serving outputs bit-exact across modes: True")
+    print(f"float/quantized argmax agreement: {agree}/{total} tokens")
+    cq = plan_q.stats()
+    print(f"quantized cache: entries={cq['entries']} hits={cq['hits']} "
+          f"lowerings={cq['lowerings']} (zero hot-path lowerings after "
+          "wave 0)")
 
 
 if __name__ == "__main__":

@@ -1,9 +1,10 @@
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
-"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
-the production meshes, prove the sharding config is coherent, and extract
-the roofline statistics from the compiled artifact.
+"""Multi-pod dry-run: build an ExecutionPlan for every (architecture x
+input shape) on the production meshes, compile its executable AOT through
+the plan's cache, prove the sharding config is coherent, and extract the
+roofline statistics from the compiled artifact.
 
     PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
     PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k --multi-pod
@@ -16,19 +17,15 @@ count on first init, and the production mesh needs 512 placeholder devices.
 
 import argparse      # noqa: E402
 import json          # noqa: E402
-import time          # noqa: E402
 import traceback     # noqa: E402
 from typing import Optional  # noqa: E402
 
-import jax           # noqa: E402
-
 from repro.configs import ALIASES, get_config, list_archs  # noqa: E402
 from repro.launch.hlo_analysis import analyze_hlo          # noqa: E402
-from repro.launch.mesh import make_production_mesh         # noqa: E402
 from repro.launch.model_flops import model_flops, param_counts  # noqa: E402
 from repro.launch.roofline import roofline_terms, summarize     # noqa: E402
-from repro.launch.steps import make_step                   # noqa: E402
 from repro.models.base import SHAPES, supports_shape       # noqa: E402
+from repro.plan import MeshSpec, build_plan                # noqa: E402
 
 
 def run_cell(
@@ -37,6 +34,7 @@ def run_cell(
     *,
     multi_pod: bool = False,
     mode: Optional[str] = None,
+    pipeline_stages: int = 1,
     verbose: bool = True,
     hlo_dir: Optional[str] = None,
     config_overrides: Optional[dict] = None,
@@ -51,6 +49,7 @@ def run_cell(
         "shape": shape_name,
         "mesh": mesh_name,
         "mode": mode or cfg.sharding_mode,
+        "stages": pipeline_stages,
     }
     ok, reason = supports_shape(cfg, shape_name)
     if not ok:
@@ -60,14 +59,14 @@ def run_cell(
             print(f"SKIP {cfg.name} x {shape_name}: {reason}")
         return record
     try:
-        mesh = make_production_mesh(multi_pod=multi_pod)
-        n_chips = mesh.devices.size
-        bundle = make_step(cfg, shape, mesh, mode)
-        t0 = time.time()
-        lowered = bundle.lower()
-        t1 = time.time()
-        compiled = lowered.compile()
-        t2 = time.time()
+        plan = build_plan(
+            cfg, shape, mode=mode,
+            mesh_spec=MeshSpec.production(multi_pod=multi_pod),
+            pipeline_stages=pipeline_stages,
+        )
+        n_chips = plan.mesh.devices.size
+        entry = plan.executable()          # AOT lower+compile, counted
+        compiled = entry.compiled
         ma = compiled.memory_analysis()
         mem = {
             "argument_bytes": ma.argument_size_in_bytes,
@@ -92,8 +91,8 @@ def run_cell(
         total_p, active_p = param_counts(cfg)
         record.update(
             status="ok",
-            lower_s=round(t1 - t0, 2),
-            compile_s=round(t2 - t1, 2),
+            lower_s=round(entry.lower_seconds, 2),
+            compile_s=round(entry.compile_seconds, 2),
             params_total=total_p,
             params_active=active_p,
             memory=mem,
@@ -103,6 +102,8 @@ def run_cell(
             },
             roofline=roofline_terms(stats, n_chips, mf, mem),
         )
+        if pipeline_stages > 1:
+            record["stage_slices"] = [s.as_dict() for s in plan.ir.stages]
         if verbose:
             print(f"== {cfg.name} x {shape_name} on {mesh_name} "
                   f"({record['mode']}) ==")
@@ -129,6 +130,8 @@ def main():
     p.add_argument("--mode", default=None,
                    choices=["cascade", "megatron", "megatron_sp"],
                    help="sharding mode override (default: per-arch config)")
+    p.add_argument("--stages", type=int, default=1,
+                   help="pipeline stages (PlaceStages pass)")
     p.add_argument("--all", action="store_true",
                    help="every (arch x shape) on the requested mesh(es)")
     p.add_argument("--moe-groups", type=int, default=None,
@@ -170,6 +173,7 @@ def main():
         for mp in meshes:
             records.append(
                 run_cell(arch, shape, multi_pod=mp, mode=args.mode,
+                         pipeline_stages=args.stages,
                          hlo_dir=args.hlo_dir,
                          config_overrides=overrides or None)
             )

@@ -1,11 +1,12 @@
-"""Serving launcher: thin CLI over the ``repro.serve`` batching subsystem.
+"""Serving launcher: thin CLI over ``repro.plan`` + ``repro.serve``.
 
-The heavy lifting — shape buckets, the AOT compiled-executable cache,
-resident state pools, prefill->decode handoff — lives in
-``repro.serve.ServeBatcher``; this module only parses flags, builds the
-mesh/config, submits synthetic requests, and prints the counters. It
-dispatches ``--rounds`` request waves so the executable-cache hit counter
-is observable after the first wave (the CI smoke job asserts hits > 0 on
+All execution wiring — mesh construction, sharding rules, quantization
+calibration, AOT executable compilation — happens inside the
+:class:`repro.plan.ExecutionPlan` built by ``build_plan``; the batcher and
+this CLI are thin consumers. This module only parses flags, builds the
+plan, submits synthetic requests, and prints the counters. It dispatches
+``--rounds`` request waves so the executable-cache hit counter is
+observable after the first wave (the CI smoke job asserts hits > 0 on
 the second).
 
 Default (production) path: 16x16 single-pod mesh (2x16x16 with
@@ -24,7 +25,9 @@ Flags:
   --multi-pod  use the 2x16x16 ("pod","data","model") mesh
   --debug      reduced config on a tiny local mesh
   --tokens     tokens to decode per request (default 8, must be >= 1)
-  --quantized  route the decode LM head through the Pallas int8 qmatmul
+  --quantized  int8 qmatmul decode LM head + a16w8 MLP down-projection
+               (shifts calibrated from the loaded weights by the plan's
+               Quantize pass)
   --rounds     request waves to dispatch (default 2: warm + cache-hit)
 """
 
@@ -32,28 +35,24 @@ from __future__ import annotations
 
 import argparse
 
-from repro.configs import get_config, reduced_config
-from repro.launch.mesh import make_debug_mesh, make_production_mesh
 from repro.models import SHAPES
+from repro.plan import MeshSpec, build_plan
 from repro.serve import BucketPolicy, DecodeRequest, ServeBatcher
 
 
 def build_batcher(args) -> ServeBatcher:
-    """Config + mesh + bucket policy -> a ServeBatcher with demo params."""
+    """One ExecutionPlan -> a ServeBatcher with demo params."""
     if args.debug:
-        cfg = reduced_config(args.arch)
-        mesh = make_debug_mesh(1, 1)
+        mesh_spec = MeshSpec.debug(1, 1)
         policy = BucketPolicy.debug()
     else:
-        cfg = get_config(args.arch)
-        mesh = make_production_mesh(multi_pod=args.multi_pod)
+        mesh_spec = MeshSpec.production(multi_pod=args.multi_pod)
         shape = SHAPES[args.shape]
         policy = BucketPolicy.production(shape.global_batch, shape.seq_len)
-    if args.mode:
-        cfg = cfg.with_(sharding_mode=args.mode)
-    batcher = ServeBatcher(cfg, mesh, quantized=args.quantized,
-                           policy=policy)
-    with mesh:
+    plan = build_plan(args.arch, None, mode=args.mode, mesh_spec=mesh_spec,
+                      quantized=args.quantized, debug=args.debug)
+    batcher = plan.make_batcher(policy=policy)
+    with plan.activate():
         batcher.init_demo_params(seed=0)
     return batcher
 
@@ -61,7 +60,8 @@ def build_batcher(args) -> ServeBatcher:
 def main():
     ap = argparse.ArgumentParser(
         description="Bucketed batch decode over AOT-cached executables "
-                    "and resident KV/SSM state pools.")
+                    "and resident KV/SSM state pools, wired by one "
+                    "ExecutionPlan.")
     ap.add_argument("--arch", required=True,
                     help="architecture alias, e.g. yi-6b")
     ap.add_argument("--shape", default="decode_32k", choices=list(SHAPES),
@@ -76,7 +76,8 @@ def main():
     ap.add_argument("--tokens", type=int, default=8,
                     help="tokens to decode per request (>= 1)")
     ap.add_argument("--quantized", action="store_true",
-                    help="int8 qmatmul decode LM head")
+                    help="int8 qmatmul decode LM head + quantized MLP "
+                         "down-projection (calibrated shifts)")
     ap.add_argument("--rounds", type=int, default=2,
                     help="request waves (2nd+ hit the executable cache)")
     args = ap.parse_args()
@@ -88,7 +89,7 @@ def main():
     batcher = build_batcher(args)
     batch = batcher.policy.buckets[0].batch
     t_first = None
-    with batcher.mesh:
+    with batcher.plan.activate():
         for wave in range(args.rounds):
             for i in range(batch):
                 batcher.submit(DecodeRequest(

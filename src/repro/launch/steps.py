@@ -65,9 +65,18 @@ class LoweringBundle:
             return jitted.lower(*self.abstract_inputs)
 
 
+def _resolve_rules(cfg: ArchConfig, mode: Optional[str],
+                   rules: Optional[ShardingRules]) -> ShardingRules:
+    # an explicit rule table (e.g. a stage-sharded one from repro.plan)
+    # takes precedence over the mode string
+    return rules if rules is not None \
+        else rules_for_mode(mode or cfg.sharding_mode)
+
+
 def make_train_step(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh,
-                    mode: Optional[str] = None) -> LoweringBundle:
-    rules = rules_for_mode(mode or cfg.sharding_mode)
+                    mode: Optional[str] = None, *,
+                    rules: Optional[ShardingRules] = None) -> LoweringBundle:
+    rules = _resolve_rules(cfg, mode, rules)
     model = build_model(cfg)
     optimizer = make_optimizer(cfg.optimizer)
     pspecs = model.param_specs()
@@ -124,8 +133,9 @@ def make_train_step(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh,
 
 
 def make_prefill_step(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh,
-                      mode: Optional[str] = None) -> LoweringBundle:
-    rules = rules_for_mode(mode or cfg.sharding_mode)
+                      mode: Optional[str] = None, *,
+                      rules: Optional[ShardingRules] = None) -> LoweringBundle:
+    rules = _resolve_rules(cfg, mode, rules)
     model = build_model(cfg)
     pspecs = model.param_specs()
     ispec = model.input_specs(shape)
@@ -155,9 +165,10 @@ def make_prefill_step(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh,
 
 
 def make_serve_step(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh,
-                    mode: Optional[str] = None) -> LoweringBundle:
+                    mode: Optional[str] = None, *,
+                    rules: Optional[ShardingRules] = None) -> LoweringBundle:
     """Decode step: one new token per sequence against resident state."""
-    rules = rules_for_mode(mode or cfg.sharding_mode)
+    rules = _resolve_rules(cfg, mode, rules)
     model = build_model(cfg)
     pspecs = model.param_specs()
     sspecs = model.decode_state_specs(shape.global_batch, shape.seq_len)
@@ -193,7 +204,9 @@ def make_serve_step(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh,
 
 def make_prefill_decode_step(cfg: ArchConfig, batch: int, prefill_len: int,
                              max_len: int, mesh: Mesh,
-                             mode: Optional[str] = None) -> LoweringBundle:
+                             mode: Optional[str] = None, *,
+                             rules: Optional[ShardingRules] = None
+                             ) -> LoweringBundle:
     """Batched prefill that hands off to decode: scan ``decode_step`` over
     a right-padded prompt block, teacher-forcing each sequence's prompt
     tokens and switching to greedy generation the moment its prompt runs
@@ -208,7 +221,7 @@ def make_prefill_decode_step(cfg: ArchConfig, batch: int, prefill_len: int,
              lengths[b] - 1`` are generated tokens, earlier ones are
              teacher-forced prompt echoes a batcher discards.
     """
-    rules = rules_for_mode(mode or cfg.sharding_mode)
+    rules = _resolve_rules(cfg, mode, rules)
     model = build_model(cfg)
     pspecs = model.param_specs()
     sspecs = model.decode_state_specs(batch, max_len)
@@ -251,11 +264,12 @@ def make_prefill_decode_step(cfg: ArchConfig, batch: int, prefill_len: int,
 
 
 def make_step(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh,
-              mode: Optional[str] = None) -> LoweringBundle:
+              mode: Optional[str] = None, *,
+              rules: Optional[ShardingRules] = None) -> LoweringBundle:
     if shape.kind == "train":
-        return make_train_step(cfg, shape, mesh, mode)
+        return make_train_step(cfg, shape, mesh, mode, rules=rules)
     if shape.kind == "prefill":
-        return make_prefill_step(cfg, shape, mesh, mode)
+        return make_prefill_step(cfg, shape, mesh, mode, rules=rules)
     if shape.kind == "decode":
-        return make_serve_step(cfg, shape, mesh, mode)
+        return make_serve_step(cfg, shape, mesh, mode, rules=rules)
     raise ValueError(shape.kind)

@@ -1,11 +1,18 @@
-"""Production training launcher.
+"""Production training launcher: thin CLI over ``repro.plan``.
 
-Default (production) path: build the 16x16 single-pod mesh — or the
-2x16x16 multi-pod mesh with --multi-pod — take the full architecture
-config and the --shape ShapeSpec, and run the restart-safe Trainer loop
-under sharding_ctx. With --debug: a reduced config on a 1x1 host mesh
-with seq=32, batch=4 (the 8-device integration tests exercise the same
-path on a 2x4 mesh).
+The ExecutionPlan owns all execution wiring — mesh construction, the
+sharding rule table, pipeline-stage placement, and parameter/optimizer
+state sharding; this module parses flags, builds one plan, and hands the
+restart-safe Trainer loop the plan's mesh/rules.
+
+Default (production) path: 16x16 single-pod mesh — or 2x16x16 with
+--multi-pod — with the full architecture config and the --shape
+ShapeSpec. With --debug: a reduced config on a 1x1 host mesh with seq=32,
+batch=4 (the 8-device integration tests exercise the same path on a 2x4
+mesh). ``--stages N`` engages the plan's PlaceStages pass: the layer
+stack splits into N pipeline stages assigned to mesh slices by the
+``core.placement`` cost model, sharding the stacked layer weights across
+the data axis instead of replicating them.
 
     PYTHONPATH=src python -m repro.launch.train --arch yi-6b --debug --steps 20
 
@@ -17,6 +24,7 @@ Flags:
                   (default: the config's sharding_mode)
   --multi-pod     use the 2x16x16 ("pod","data","model") mesh
   --debug         reduced config on a tiny local mesh
+  --stages        pipeline stages for the PlaceStages pass (default 1)
   --steps         training steps (default 50)
   --ckpt-dir      checkpoint directory (resume is automatic from the
                   newest checkpoint found there)
@@ -31,25 +39,18 @@ import argparse
 import jax
 import numpy as np
 
-from repro.configs import get_config, reduced_config
 from repro.data.pipeline import make_train_iterator
-from repro.dist.sharding import (
-    init_params,
-    rules_for_mode,
-    sharding_ctx,
-    specs_to_shardings,
-)
-from repro.launch.mesh import make_debug_mesh, make_production_mesh
-from repro.models import SHAPES, build_model
+from repro.models import SHAPES
 from repro.models.base import ShapeSpec
-from repro.optim.optimizers import make_optimizer
+from repro.plan import MeshSpec, build_plan
 from repro.train.trainer import Trainer, TrainerConfig
 
 
 def main():
     ap = argparse.ArgumentParser(
         description="Sharded training on a production or debug mesh with "
-                    "the restart-safe Trainer loop.")
+                    "the restart-safe Trainer loop, wired by one "
+                    "ExecutionPlan.")
     ap.add_argument("--arch", required=True,
                     help="architecture alias, e.g. yi-6b")
     ap.add_argument("--shape", default="train_4k", choices=list(SHAPES),
@@ -61,6 +62,9 @@ def main():
                     help="2x16x16 (pod,data,model) mesh instead of 16x16")
     ap.add_argument("--debug", action="store_true",
                     help="reduced config on a tiny local mesh (seq=32, batch=4)")
+    ap.add_argument("--stages", type=int, default=1,
+                    help="pipeline stages (PlaceStages pass; layers shard "
+                         "across mesh slices chosen by the cost model)")
     ap.add_argument("--steps", type=int, default=50,
                     help="training steps to run")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_train",
@@ -72,40 +76,38 @@ def main():
     args = ap.parse_args()
 
     if args.debug:
-        cfg = reduced_config(args.arch)
-        mesh = make_debug_mesh(1, 1)
-        seq, batch = 32, 4
+        shape = ShapeSpec("debug_train", 32, 4, "train")
+        mesh_spec = MeshSpec.debug(1, 1)
     else:
-        cfg = get_config(args.arch)
-        mesh = make_production_mesh(multi_pod=args.multi_pod)
         shape = SHAPES[args.shape]
-        seq, batch = shape.seq_len, shape.global_batch
-    if args.mode:
-        cfg = cfg.with_(sharding_mode=args.mode)
+        mesh_spec = MeshSpec.production(multi_pod=args.multi_pod)
 
-    rules = rules_for_mode(cfg.sharding_mode)
-    model = build_model(cfg)
-    optimizer = make_optimizer(cfg.optimizer)
-
-    with mesh, sharding_ctx(mesh, rules):
-        specs = model.param_specs()
-        params = init_params(jax.random.PRNGKey(0), specs)
-        params = jax.device_put(params,
-                                specs_to_shardings(specs, mesh, rules))
-        opt_state = optimizer.init(params)
+    plan = build_plan(args.arch, shape, mode=args.mode, mesh_spec=mesh_spec,
+                      pipeline_stages=args.stages, debug=args.debug)
+    params, opt_state = plan.init_train_state(seed=0)
     n = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
-    print(f"{cfg.name}: {n/1e6:.1f}M params on mesh {mesh.devices.shape} "
-          f"mode={cfg.sharding_mode}")
+    print(f"{plan.cfg.name}: {n/1e6:.1f}M params on mesh "
+          f"{plan.mesh.devices.shape} mode={plan.mode} "
+          f"stages={args.stages}")
+    if plan.ir.stages:
+        for s in plan.ir.stages:
+            print(f"  stage {s.index}: layers [{s.first_layer}, "
+                  f"{s.first_layer + s.n_layers}) on rows "
+                  f"[{s.row}, {s.row + s.height}) (cost model: "
+                  f"{plan.ir.placement_method})")
 
     tcfg = TrainerConfig(
         steps=args.steps, ckpt_every=max(args.steps // 4, 1),
         ckpt_dir=args.ckpt_dir, log_every=5,
         microbatches=args.microbatches, compress_grads=args.compress_grads,
     )
-    trainer = Trainer(model.loss, optimizer, tcfg, mesh=mesh, rules=rules)
+    trainer = Trainer(plan.model.loss, plan.optimizer, tcfg,
+                      mesh=plan.mesh, rules=plan.rules)
+
+    seq, batch = shape.seq_len, shape.global_batch
 
     def iters(start):
-        return make_train_iterator(cfg.vocab, seq, batch, seed=0,
+        return make_train_iterator(plan.cfg.vocab, seq, batch, seed=0,
                                    start_step=start)
 
     _, _, hist = trainer.fit(params, opt_state, iters)

@@ -94,24 +94,29 @@ def quantized_linear(
     w_shift: int = 7,
     out_shift: int = 7,
     relu: bool = False,
+    x_dtype: str = "int8",
     out_dtype: str = "int8",
     out_float_dtype=None,
 ):
-    """Paper-faithful int8 path: quantize, run the fused Pallas kernel,
+    """Paper-faithful integer path: quantize, run the fused Pallas kernel,
     dequantize. Used by the serving configs on TPU (interpret-mode on CPU).
 
-    ``out_dtype`` picks the kernel's SRS output width ("int8"/"int16" —
-    int16 keeps logit-grade resolution for the serve LM head);
-    ``out_float_dtype`` overrides the dequantized dtype (default: x.dtype).
-    Dequantization happens in fp32 before the final cast so an int16
-    result is not truncated through bf16's 8-bit mantissa.
+    ``x_dtype`` picks the activation operand width ("int8"/"int16" — the
+    kernel's native a16w8 tiling keeps sub-1e-3 activation resolution for
+    the quantized MLP path); ``out_dtype`` picks the SRS output width
+    ("int8"/"int16" — int16 keeps logit-grade resolution for the serve LM
+    head); ``out_float_dtype`` overrides the dequantized dtype (default:
+    x.dtype). Dequantization happens in fp32 before the final cast so an
+    int16 result is not truncated through bf16's 8-bit mantissa.
     """
     from repro.kernels.qmatmul.ops import qlinear  # lazy: pallas import
     from repro.quant.srs import INT_RANGE
 
+    lo_x, hi_x = INT_RANGE[x_dtype]
+    xq = jnp.clip(jnp.round(x.astype(jnp.float32) * (2.0**x_shift)),
+                  lo_x, hi_x)
+    xq = xq.astype(jnp.int16 if x_dtype == "int16" else jnp.int8)
     lo, hi = INT_RANGE["int8"]
-    xq = jnp.clip(jnp.round(x.astype(jnp.float32) * (2.0**x_shift)), lo, hi)
-    xq = xq.astype(jnp.int8)
     wq = jnp.clip(
         jnp.round(params["w"].astype(jnp.float32) * (2.0**w_shift)), lo, hi
     ).astype(jnp.int8)

@@ -2,13 +2,40 @@
 
 from __future__ import annotations
 
-from typing import Optional
+import threading
+from contextlib import contextmanager
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.dist.sharding import shard_act
-from repro.layers.linear import linear, linear_spec
+from repro.layers.linear import linear, linear_spec, quantized_linear
+
+_CAL = threading.local()
+
+
+@contextmanager
+def swiglu_calibration(record: Dict[str, float]):
+    """Observe down-projection ranges for quantization calibration.
+
+    While active, every *eager* float ``swiglu`` call folds the absmax of
+    its down-projection input ("act") and output ("out") into ``record``.
+    Tracing is unaffected (tracer values are skipped), so the scope costs
+    nothing outside the plan's calibration decode.
+    """
+    prev = getattr(_CAL, "record", None)
+    _CAL.record = record
+    try:
+        yield record
+    finally:
+        _CAL.record = prev
+
+
+def _observe(record: Dict[str, float], key: str, x: jnp.ndarray) -> None:
+    if isinstance(x, jax.core.Tracer):
+        return
+    record[key] = max(record.get(key, 0.0), float(jnp.abs(x).max()))
 
 
 def swiglu_spec(d_model: int, d_ff: int, mode: str, *, stack=None,
@@ -20,12 +47,33 @@ def swiglu_spec(d_model: int, d_ff: int, mode: str, *, stack=None,
     }
 
 
-def swiglu(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+def swiglu(params: dict, x: jnp.ndarray,
+           quant: Optional[Tuple[int, int, int]] = None) -> jnp.ndarray:
+    """SwiGLU FFN. ``quant=(x_shift, w_shift, out_shift)`` routes the
+    down-projection — the GEMV that dominates a decode-time FFN — through
+    the Pallas int8 qmatmul with an int16 SRS output, mirroring the decode
+    LM head's quantized path (the gate/up projections stay bf16: their
+    silu product is exactly the activation the shifts are calibrated for).
+    """
     g = linear(params["gate"], x)
     u = linear(params["up"], x)
     h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
     h = shard_act(h, "batch", "seq", "act_mlp")
-    return linear(params["down"], h)
+    if quant is not None:
+        x_shift, w_shift, out_shift = quant
+        # a16w8: the kernel's native int16-activation tiling — activation
+        # resolution stays below the bf16 mantissa step at these shifts
+        return quantized_linear(
+            params["down"], h,
+            x_shift=x_shift, w_shift=w_shift, out_shift=out_shift,
+            x_dtype="int16", out_dtype="int16",
+        )
+    y = linear(params["down"], h)
+    record = getattr(_CAL, "record", None)
+    if record is not None:
+        _observe(record, "act", h)
+        _observe(record, "out", y)
+    return y
 
 
 def mlp_spec(d_model: int, d_ff: int, mode: str, *, stack=None,

@@ -65,6 +65,16 @@ class ArchConfig:
     ssd_chunk: int = 128
     optimizer: str = "adamw"     # "adafactor" for the very large configs
     quantized: bool = False      # serve: int8 qmatmul LM head (--quantized)
+    # serve: also route the MLP down-projection through the qmatmul kernel
+    # (a16w8: int16 activations, int8 weights, int16 SRS out). The shifts
+    # are per-tensor calibrated by the plan's Quantize pass
+    # (repro.plan.passes.calibrate_mlp_shifts); the defaults below are the
+    # analytic fallback for silu-gated activations on unit-RMS inputs
+    # (absmax < 16 -> x_shift 11, fan-in-scaled weights -> w_shift 8).
+    quantized_mlp: bool = False
+    mlp_x_shift: int = 11
+    mlp_w_shift: int = 8
+    mlp_out_shift: int = 11
     notes: str = ""
 
     def with_(self, **kw) -> "ArchConfig":

@@ -51,7 +51,11 @@ def _ffn_part(params: dict, x: jnp.ndarray, cfg: ArchConfig):
         if "shared" in params:
             y = y + swiglu(params["shared"], x)
         return y, aux
-    return swiglu(params["ffn"], x), jnp.zeros((), jnp.float32)
+    # int8 down-projection on serve plans (the plan's Quantize pass sets
+    # quantized_mlp and calibrates the shifts per weight tensor)
+    quant = ((cfg.mlp_x_shift, cfg.mlp_w_shift, cfg.mlp_out_shift)
+             if cfg.quantized_mlp else None)
+    return swiglu(params["ffn"], x, quant=quant), jnp.zeros((), jnp.float32)
 
 
 def attn_block(

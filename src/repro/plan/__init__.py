@@ -1,0 +1,40 @@
+"""One compile-plan API: the pass pipeline that unifies mesh construction,
+sharding resolution, stage placement, quantization, and AOT compilation.
+
+Public surface:
+
+* :func:`~repro.plan.plan.build_plan` — run ResolveMesh -> ResolveSharding
+  -> PlaceStages -> Quantize -> Compile over a :class:`~repro.plan.ir.PlanIR`
+  and get an :class:`~repro.plan.plan.ExecutionPlan`.
+* :class:`~repro.plan.plan.ExecutionPlan` — the only way executables are
+  built: params/state sharding, stage-aware rule tables, the AOT
+  executable catalogue (train/prefill/decode) behind the shared
+  ``ExecutableCache``, and ``describe()`` introspection.
+* :class:`~repro.plan.ir.MeshSpec` — declarative mesh description
+  (``debug``/``production``/``from_mesh``).
+* ``PLAN_PIPELINE`` — the ordered (name, pass) list, introspectable like
+  ``repro.core.passes.PIPELINE``.
+
+See docs/compile_plan.md for the pass-by-pass reference.
+"""
+
+from repro.plan.ir import MeshSpec, PlanIR, StagePlacement
+from repro.plan.passes import (
+    PLAN_PIPELINE,
+    assign_stage_slices,
+    calibrate_mlp_shifts,
+    stack_depth,
+)
+from repro.plan.plan import ExecutionPlan, build_plan
+
+__all__ = [
+    "ExecutionPlan",
+    "MeshSpec",
+    "PLAN_PIPELINE",
+    "PlanIR",
+    "StagePlacement",
+    "assign_stage_slices",
+    "build_plan",
+    "calibrate_mlp_shifts",
+    "stack_depth",
+]

@@ -1,0 +1,105 @@
+"""Plan smoke CLI: build an ExecutionPlan, dump ``describe()``, optionally
+prove the zero-hot-path-lowerings property.
+
+    PYTHONPATH=src python -m repro.plan --arch yi-6b --debug --warm \\
+        --out plan_yi6b.json
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+    PYTHONPATH=src python -m repro.plan --arch yi-6b --debug \\
+        --data 2 --model 4 --stages 2 --warm
+
+``--warm`` builds the plan's ServeBatcher, dispatches two request waves,
+and FAILS (exit 1) unless the second wave performs zero new lowerings and
+zero new compiles — the acceptance bar the CI plan-smoke job reuses. The
+``--out`` JSON is the plan's full pass-decision dump (uploaded as a CI
+artifact), written after the warm check so the cache counters are
+included.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.models import SHAPES
+from repro.plan import MeshSpec, build_plan
+from repro.serve import DecodeRequest
+
+
+def warm_check(plan) -> bool:
+    """Two request waves; True iff the second adds no lowerings/compiles."""
+    batcher = plan.make_batcher()
+    with plan.activate():
+        batcher.init_demo_params(seed=0)
+        for wave in range(2):
+            for i in range(batcher.policy.buckets[0].batch):
+                batcher.submit(DecodeRequest(
+                    f"w{wave}r{i}", [1 + (i + j) % 7 for j in range(2)],
+                    max_new_tokens=4))
+            batcher.run()
+            if wave == 0:
+                warm = dict(plan.stats())
+    after = plan.stats()
+    ok = (after["lowerings"] == warm["lowerings"]
+          and after["compiles"] == warm["compiles"]
+          and after["hits"] > warm["hits"])
+    print(f"warm check: lowerings {warm['lowerings']} -> "
+          f"{after['lowerings']}, compiles {warm['compiles']} -> "
+          f"{after['compiles']}, hits {warm['hits']} -> {after['hits']} "
+          f"=> {'OK' if ok else 'FAIL'}")
+    return ok
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description="Build an ExecutionPlan, dump its pass decisions, and "
+                    "optionally assert zero hot-path lowerings after "
+                    "warmup.")
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES),
+                    help="pin a ShapeSpec (default: serve plan, "
+                         "per-bucket shapes)")
+    ap.add_argument("--mode", default=None,
+                    choices=["cascade", "megatron", "megatron_sp"])
+    ap.add_argument("--debug", action="store_true",
+                    help="reduced config on a debug mesh")
+    ap.add_argument("--data", type=int, default=1,
+                    help="debug mesh data-axis extent")
+    ap.add_argument("--model", type=int, default=1,
+                    help="debug mesh model-axis extent")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--stages", type=int, default=1)
+    ap.add_argument("--quantized", action="store_true")
+    ap.add_argument("--warm", action="store_true",
+                    help="assert zero new lowerings on the second wave")
+    ap.add_argument("--out", default=None,
+                    help="write the describe() JSON here")
+    args = ap.parse_args()
+
+    mesh_spec = (MeshSpec.debug(args.data, args.model) if args.debug
+                 else MeshSpec.production(multi_pod=args.multi_pod))
+    plan = build_plan(args.arch, args.shape, mode=args.mode,
+                      mesh_spec=mesh_spec, quantized=args.quantized,
+                      pipeline_stages=args.stages, debug=args.debug)
+
+    d = plan.describe()
+    print(f"{d['arch']} ({d['family']}) mode={d['mode']} "
+          f"mesh={d['mesh']} stages={d['pipeline_stages']} "
+          f"quantized={d['quantized']}")
+    for p in d["passes"]:
+        entry = {k: v for k, v in p.items() if k != "pass"}
+        print(f"  {p['pass']}: {entry}")
+
+    ok = True
+    if args.warm:
+        ok = warm_check(plan)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(plan.describe(), f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.out}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,309 @@
+"""``build_plan`` and :class:`ExecutionPlan`: the one compile-plan API.
+
+Every executable in this framework — train step, prefill, decode — is
+built by handing ``build_plan`` an architecture, a shape, and a
+:class:`~repro.plan.ir.MeshSpec`, and asking the resulting plan for the
+executable. Launchers, the serve batcher, benchmarks, and examples are all
+thin consumers; none of them touch ``make_*_mesh``, ``rules_for_mode``,
+``specs_to_shardings``, or ``lower().compile()`` directly.
+
+    from repro.plan import MeshSpec, build_plan
+    plan = build_plan("yi-6b", shape="train_4k",
+                      mesh_spec=MeshSpec.production())
+    params, opt_state = plan.init_train_state(seed=0)
+    step = plan.executable("train")          # AOT, cached, counted
+    print(plan.describe())                   # every pass decision
+
+The plan is produced by the ordered pass pipeline in
+``repro.plan.passes`` (ResolveMesh -> ResolveSharding -> PlaceStages ->
+Quantize -> Compile) over a :class:`~repro.plan.ir.PlanIR`; the IR records
+what each pass decided and ``describe()`` dumps it for CI artifacts.
+"""
+
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Any, Dict, Optional, Union
+
+import jax
+
+from repro.dist.sharding import (
+    abstract_params,
+    init_params,
+    sharding_ctx,
+    specs_to_shardings,
+)
+from repro.launch.steps import (
+    make_prefill_decode_step,
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+)
+from repro.models.base import ArchConfig, SHAPES, ShapeSpec, build_model
+from repro.plan.ir import MeshSpec, PlanIR
+from repro.plan.passes import PLAN_PIPELINE, calibrate_mlp_shifts
+from repro.serve.cache import CacheKey, CachedExecutable, ExecutableCache
+
+
+class ExecutionPlan:
+    """A fully resolved execution recipe: mesh + rules + stages + quant +
+    the AOT executable catalogue. Construct via :func:`build_plan`."""
+
+    def __init__(self, ir: PlanIR, cache: Optional[ExecutableCache] = None):
+        self.ir = ir
+        self.cache = cache or ExecutableCache()
+        self._model = None
+        self._model_cfg = None
+        self._optimizer = None
+        self._built_any = False
+
+    # -- resolved views -------------------------------------------------------
+
+    @property
+    def cfg(self) -> ArchConfig:
+        return self.ir.cfg
+
+    @property
+    def mesh(self):
+        return self.ir.mesh
+
+    @property
+    def rules(self):
+        return self.ir.rules
+
+    @property
+    def mode(self) -> str:
+        return self.ir.mode
+
+    @property
+    def shape(self) -> Optional[ShapeSpec]:
+        return self.ir.shape
+
+    @property
+    def model(self):
+        if self._model is None or self._model_cfg is not self.ir.cfg:
+            self._model = build_model(self.ir.cfg)
+            self._model_cfg = self.ir.cfg
+        return self._model
+
+    @property
+    def optimizer(self):
+        if self._optimizer is None:
+            from repro.optim.optimizers import make_optimizer
+
+            self._optimizer = make_optimizer(self.cfg.optimizer)
+        return self._optimizer
+
+    @contextmanager
+    def activate(self):
+        """``with mesh, sharding_ctx(...)`` — tracing/eager context."""
+        with self.mesh, sharding_ctx(self.mesh, self.rules):
+            yield self
+
+    # -- parameters / state ---------------------------------------------------
+
+    def param_specs(self):
+        return self.model.param_specs()
+
+    def abstract_params(self):
+        return abstract_params(self.param_specs())
+
+    def param_shardings(self):
+        return specs_to_shardings(self.param_specs(), self.mesh, self.rules)
+
+    def shard_params(self, params):
+        """Place (and stage/mode-shard) an existing parameter pytree."""
+        self.calibrate(params)
+        return jax.device_put(params, self.param_shardings())
+
+    def init_params(self, seed: int = 0):
+        """Random sharded parameters (demos, benchmarks, tests)."""
+        return self.shard_params(
+            init_params(jax.random.PRNGKey(seed), self.param_specs()))
+
+    def init_train_state(self, seed: int = 0):
+        """(sharded params, optimizer state) ready for the train step."""
+        params = self.init_params(seed)
+        with self.activate():
+            opt_state = self.optimizer.init(params)
+        return params, opt_state
+
+    def state_shardings(self, batch: int, max_len: int):
+        sspecs = self.model.decode_state_specs(batch, max_len)
+        return specs_to_shardings(sspecs, self.mesh, self.rules)
+
+    def fresh_decode_state(self, batch: int, max_len: int):
+        """A zeroed, sharded decode-state pytree for one bucket shape."""
+        sspecs = self.model.decode_state_specs(batch, max_len)
+        return jax.device_put(
+            init_params(jax.random.PRNGKey(0), sspecs),
+            specs_to_shardings(sspecs, self.mesh, self.rules))
+
+    # -- quantization calibration ---------------------------------------------
+
+    def calibrate(self, params) -> "ExecutionPlan":
+        """Refine the Quantize pass's MLP shifts from real weights.
+
+        Runs once, before any executable is built (a calibration after
+        compilation would silently mismatch the cached executables, so it
+        is skipped and recorded instead).
+        """
+        if not self.cfg.quantized_mlp or self.ir.quant.get("calibrated"):
+            return self
+        if self._built_any:
+            self.ir.record("Quantize", skipped_calibration=(
+                "executables already compiled with default shifts"))
+            return self
+        # fully float: the eager calibration decode must not enter the
+        # Pallas kernels (pallas_call can't run under jax.disable_jit)
+        float_model = build_model(
+            self.cfg.with_(quantized=False, quantized_mlp=False))
+        x_s, w_s, o_s = calibrate_mlp_shifts(self.cfg, params,
+                                             model=float_model)
+        self.ir.cfg = self.cfg.with_(
+            mlp_x_shift=x_s, mlp_w_shift=w_s, mlp_out_shift=o_s)
+        self.ir.quant.update(mlp_shifts=(x_s, w_s, o_s), calibrated=True)
+        self.ir.record("Quantize", calibrated_mlp_shifts=(x_s, w_s, o_s))
+        return self
+
+    def _qsig(self):
+        cfg = self.cfg
+        if not cfg.quantized_mlp:
+            return ()
+        return (("mlp", cfg.mlp_x_shift, cfg.mlp_w_shift, cfg.mlp_out_shift),)
+
+    # -- executables ----------------------------------------------------------
+
+    def _key(self, kind: str, batch: int, max_len: int,
+             prefill_len: int = 0) -> CacheKey:
+        return CacheKey(
+            arch=self.cfg.name, kind=kind, batch=batch, max_len=max_len,
+            prefill_len=prefill_len, mode=self.mode,
+            mesh_axes=CacheKey.mesh_signature(self.mesh),
+            quantized=self.cfg.quantized,
+            stages=self.ir.pipeline_stages, qsig=self._qsig(),
+        )
+
+    def executable(self, kind: Optional[str] = None) -> CachedExecutable:
+        """The AOT executable for this plan's ShapeSpec (train/prefill/
+        decode). Compiled once through the ExecutableCache and counted."""
+        shape = self.shape
+        if shape is None:
+            raise ValueError(
+                "this plan has no pinned ShapeSpec (serve plans build "
+                "per-bucket executables via serve_executable)")
+        kind = kind or shape.kind
+        builders = {
+            "train": lambda: make_train_step(
+                self.cfg, shape, self.mesh, rules=self.rules),
+            "prefill": lambda: make_prefill_step(
+                self.cfg, shape, self.mesh, rules=self.rules),
+            "decode": lambda: make_serve_step(
+                self.cfg, shape, self.mesh, rules=self.rules),
+        }
+        if kind not in builders:
+            raise ValueError(f"unknown executable kind {kind!r}")
+        key = self._key(kind, shape.global_batch, shape.seq_len)
+        self._built_any = True
+        return self.cache.get_or_build(key, builders[kind])
+
+    def serve_executable(self, kind: str, *, batch: int, max_len: int,
+                         prefill_len: int = 0) -> CachedExecutable:
+        """A bucketed serving executable: ``kind`` is "decode" (single
+        token against resident state) or "prefill" (the prefill->decode
+        scan handoff padded to ``prefill_len``)."""
+        if kind == "decode":
+            shape = ShapeSpec(f"b{batch}xl{max_len}", max_len, batch,
+                              "decode")
+            build = lambda: make_serve_step(  # noqa: E731
+                self.cfg, shape, self.mesh, rules=self.rules)
+        elif kind == "prefill":
+            build = lambda: make_prefill_decode_step(  # noqa: E731
+                self.cfg, batch, prefill_len, max_len, self.mesh,
+                rules=self.rules)
+        else:
+            raise ValueError(f"unknown serve executable kind {kind!r}")
+        key = self._key(kind, batch, max_len, prefill_len)
+        self._built_any = True
+        return self.cache.get_or_build(key, build)
+
+    def make_batcher(self, policy=None, **kw):
+        """A ServeBatcher whose executables all come from this plan."""
+        from repro.serve.batcher import ServeBatcher
+
+        return ServeBatcher(self, policy=policy, **kw)
+
+    # -- observability --------------------------------------------------------
+
+    def describe(self) -> Dict[str, Any]:
+        """JSON-able dump of every pass decision (CI artifact / debugging)."""
+        ir = self.ir
+        return {
+            "arch": self.cfg.name,
+            "family": self.cfg.family,
+            "shape": ir.shape.name if ir.shape else None,
+            "mode": ir.mode,
+            "mesh": ir.mesh_spec.label(),
+            "mesh_axes": dict(zip(ir.mesh.axis_names,
+                                  (int(s) for s in ir.mesh.devices.shape))),
+            "quantized": ir.quantized,
+            "pipeline_stages": ir.pipeline_stages,
+            "stage_axis": ir.stage_axis,
+            "stages": [s.as_dict() for s in ir.stages],
+            "quant": dict(ir.quant),
+            "executables": ir.executables,
+            "params": dict(ir.param_pspecs),
+            "passes": [{"pass": name, **entry}
+                       for name, entry in ir.decisions],
+            "cache": self.cache.stats(),
+        }
+
+    def stats(self) -> Dict[str, Any]:
+        return self.cache.stats()
+
+
+def build_plan(
+    arch: Union[str, ArchConfig],
+    shape: Union[str, ShapeSpec, None] = None,
+    *,
+    mode: Optional[str] = None,
+    mesh_spec: Optional[Union[MeshSpec, Any]] = None,
+    quantized: bool = False,
+    pipeline_stages: int = 1,
+    debug: bool = False,
+    config_overrides: Optional[Dict[str, Any]] = None,
+    cache: Optional[ExecutableCache] = None,
+) -> ExecutionPlan:
+    """Run the plan pass pipeline and return the ExecutionPlan.
+
+    ``arch`` is an architecture alias ("yi-6b") or an ArchConfig;
+    ``shape`` a ShapeSpec / SHAPES name, or None for a serve plan whose
+    decode/prefill shapes come per bucket. ``mesh_spec`` is a MeshSpec
+    (or an already-built Mesh); defaults to the 1x1 debug mesh under
+    ``debug`` and the single-pod production mesh otherwise.
+    ``pipeline_stages`` > 1 engages the PlaceStages pass.
+    """
+    if isinstance(arch, ArchConfig):
+        cfg = arch
+    else:
+        from repro.configs import get_config, reduced_config
+
+        cfg = reduced_config(arch) if debug else get_config(arch)
+    if config_overrides:
+        cfg = cfg.with_(**config_overrides)
+    if mode:
+        cfg = cfg.with_(sharding_mode=mode)
+    if isinstance(shape, str):
+        shape = SHAPES[shape]
+    if mesh_spec is None:
+        mesh_spec = MeshSpec.debug(1, 1) if debug else MeshSpec.production()
+    elif not isinstance(mesh_spec, MeshSpec):
+        mesh_spec = MeshSpec.from_mesh(mesh_spec)
+
+    ir = PlanIR(
+        cfg=cfg, shape=shape, mode=cfg.sharding_mode, mesh_spec=mesh_spec,
+        quantized=quantized, pipeline_stages=pipeline_stages,
+    )
+    for _name, pass_fn in PLAN_PIPELINE:
+        ir = pass_fn(ir)
+    return ExecutionPlan(ir, cache)

@@ -25,18 +25,15 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
-from typing import Deque, Dict, List, Optional, Sequence
+from typing import Deque, Dict, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
-from repro.dist.sharding import init_params, rules_for_mode, specs_to_shardings
-from repro.launch.steps import make_prefill_decode_step, make_serve_step
-from repro.models import build_model
-from repro.models.base import ArchConfig, ShapeSpec
-from repro.serve.cache import CachedExecutable, CacheKey, ExecutableCache
+from repro.models.base import ArchConfig
+from repro.serve.cache import CachedExecutable, ExecutableCache
 from repro.serve.state_pool import StatePool
 
 _MIN_PREFILL = 8
@@ -163,43 +160,75 @@ class BucketMetrics:
 class ServeBatcher:
     """Admit DecodeRequests, dispatch bucketed groups on AOT executables.
 
-    The batcher owns the sharded parameters, the executable cache, and the
-    state pool; ``submit`` enqueues, ``run`` drains the queue FIFO and
-    returns per-request results. ``cfg.sharding_mode`` picks the rule
-    table; pass ``quantized=True`` to route the decode LM head through the
-    Pallas int8 qmatmul path (separately keyed in the cache).
+    A thin consumer of :class:`repro.plan.ExecutionPlan`: the plan owns
+    the mesh, the rule table, quantization decisions, and every compiled
+    executable; the batcher only groups requests into buckets and drives
+    the dispatch loop. Construct from an existing plan
+    (``plan.make_batcher(...)``), or pass ``(cfg, mesh)`` and one is built
+    internally — ``quantized=True`` then routes the decode LM head *and*
+    MLP down-projection through the Pallas qmatmul paths, with shifts
+    calibrated from the loaded weights (separately keyed in the cache).
     """
 
-    def __init__(self, cfg: ArchConfig, mesh: Mesh, *,
+    def __init__(self, plan_or_cfg: Union["ExecutionPlan", ArchConfig],  # noqa: F821
+                 mesh: Optional[Mesh] = None, *,
                  quantized: bool = False,
                  policy: Optional[BucketPolicy] = None,
                  cache: Optional[ExecutableCache] = None):
-        self.cfg = cfg.with_(quantized=quantized) if quantized else cfg
-        self.mesh = mesh
-        self.rules = rules_for_mode(self.cfg.sharding_mode)
-        self.model = build_model(self.cfg)
+        from repro.plan import ExecutionPlan, build_plan
+
+        if isinstance(plan_or_cfg, ExecutionPlan):
+            if mesh is not None:
+                raise ValueError("pass either a plan or (cfg, mesh), "
+                                 "not both")
+            if quantized or cache is not None:
+                raise ValueError("quantized/cache are plan decisions: set "
+                                 "them in build_plan, not on the batcher")
+            self.plan = plan_or_cfg
+        else:
+            if mesh is None:
+                raise ValueError("ServeBatcher(cfg, mesh) needs a mesh")
+            self.plan = build_plan(plan_or_cfg, None, mesh_spec=mesh,
+                                   quantized=quantized, cache=cache)
         self.policy = policy or BucketPolicy.debug()
-        self.cache = cache or ExecutableCache()
-        self.pool = StatePool(self.model, mesh, self.rules)
+        self.pool = StatePool(self.plan)
         self.params = None
         self.metrics: Dict[str, BucketMetrics] = {}
         self._pending: Deque[DecodeRequest] = collections.deque()
         self._argmax_fns: Dict[str, object] = {}
 
+    # plan views (kept as attributes of record for tests/telemetry)
+    @property
+    def cfg(self) -> ArchConfig:
+        return self.plan.cfg
+
+    @property
+    def mesh(self) -> Mesh:
+        return self.plan.mesh
+
+    @property
+    def rules(self):
+        return self.plan.rules
+
+    @property
+    def model(self):
+        return self.plan.model
+
+    @property
+    def cache(self) -> ExecutableCache:
+        return self.plan.cache
+
     # -- parameters -----------------------------------------------------------
 
     def load_params(self, params) -> "ServeBatcher":
-        """Install (and shard) an existing parameter pytree."""
-        self.params = jax.device_put(
-            params,
-            specs_to_shardings(self.model.param_specs(), self.mesh,
-                               self.rules))
+        """Install (calibrate quantization shifts, then shard) params."""
+        self.params = self.plan.shard_params(params)
         return self
 
     def init_demo_params(self, seed: int = 0) -> "ServeBatcher":
         """Random sharded parameters (CLI demos, benchmarks, tests)."""
-        return self.load_params(
-            init_params(jax.random.PRNGKey(seed), self.model.param_specs()))
+        self.params = self.plan.init_params(seed)
+        return self
 
     # -- admission ------------------------------------------------------------
 
@@ -248,22 +277,9 @@ class ServeBatcher:
 
     def _executable(self, kind: str, bucket: Bucket,
                     prefill_len: int) -> CachedExecutable:
-        key = CacheKey(
-            arch=self.cfg.name, kind=kind, batch=bucket.batch,
-            max_len=bucket.max_len, prefill_len=prefill_len,
-            mode=self.cfg.sharding_mode,
-            mesh_axes=CacheKey.mesh_signature(self.mesh),
-            quantized=self.cfg.quantized,
-        )
-        if kind == "decode":
-            shape = ShapeSpec(bucket.label, bucket.max_len, bucket.batch,
-                              "decode")
-            build = lambda: make_serve_step(self.cfg, shape, self.mesh)  # noqa: E731
-        else:
-            build = lambda: make_prefill_decode_step(  # noqa: E731
-                self.cfg, bucket.batch, prefill_len, bucket.max_len,
-                self.mesh)
-        return self.cache.get_or_build(key, build)
+        return self.plan.serve_executable(
+            kind, batch=bucket.batch, max_len=bucket.max_len,
+            prefill_len=prefill_len)
 
     def _argmax(self, bucket: Bucket, tok_sharding):
         fn = self._argmax_fns.get(bucket.label)

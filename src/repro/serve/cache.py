@@ -8,11 +8,14 @@ lowered+compiled XLA executable produced by a ``LoweringBundle`` from
 ``repro.launch.steps``; this module holds them in a process-wide map keyed
 by everything that changes the program:
 
-    (arch, kind, batch, max_len, prefill_len, mode, mesh axes, quantized)
+    (arch, kind, batch, max_len, prefill_len, mode, mesh axes, quantized,
+     stages, qsig)
 
-``ExecutableCache.get_or_build`` is the only entry point. On a miss it
-calls the supplied builder (``make_serve_step(...)`` /
-``make_prefill_decode_step(...)``), runs ``.lower().compile()`` exactly
+``ExecutableCache.get_or_build`` is the only entry point — the plan's
+Compile pass routes every executable in the system (train, prefill,
+decode) through it. On a miss it calls the supplied builder
+(``make_serve_step(...)`` / ``make_prefill_decode_step(...)`` /
+``make_train_step(...)``), runs ``.lower().compile()`` exactly
 once, and records the cost; on a hit it returns the resident executable
 untouched. The ``hits`` / ``misses`` / ``lowerings`` / ``compiles``
 counters exist so tests and benchmarks can assert the hot path performs
@@ -33,18 +36,23 @@ from jax.sharding import Mesh
 class CacheKey:
     """Identity of one compiled step executable.
 
-    ``prefill_len`` is 0 for pure decode steps; ``mesh_axes`` pins both
-    the axis names and sizes (a 2x4 and a 4x2 mesh compile differently).
+    ``prefill_len`` is 0 for pure decode and train steps; ``mesh_axes``
+    pins both the axis names and sizes (a 2x4 and a 4x2 mesh compile
+    differently). ``stages`` and ``qsig`` separate plan variants: a
+    stage-sharded layers axis or recalibrated quantization shifts change
+    the program even when everything else matches.
     """
 
     arch: str
-    kind: str                      # "decode" | "prefill"
+    kind: str                      # "decode" | "prefill" | "train"
     batch: int
     max_len: int
     prefill_len: int
     mode: str
     mesh_axes: Tuple[Tuple[str, int], ...]
     quantized: bool = False
+    stages: int = 1
+    qsig: Tuple[Tuple[Any, ...], ...] = ()
 
     @staticmethod
     def mesh_signature(mesh: Mesh) -> Tuple[Tuple[str, int], ...]:
@@ -56,13 +64,15 @@ class CachedExecutable:
     """A resident executable plus the bundle it was compiled from.
 
     The bundle is kept for its shardings (dispatch uses them to place
-    host inputs) — never re-lowered.
+    host inputs) — never re-lowered. ``lower_seconds``/``compile_seconds``
+    split the one-time build cost (the dry-run reports both).
     """
 
     key: CacheKey
     bundle: Any                    # LoweringBundle
     compiled: Any                  # jax.stages.Compiled
     compile_seconds: float
+    lower_seconds: float = 0.0
 
 
 class ExecutableCache:
@@ -116,13 +126,16 @@ class ExecutableCache:
             bundle = build()
             t0 = time.perf_counter()
             lowered = bundle.lower()
+            t1 = time.perf_counter()
             compiled = lowered.compile()
-            dt = time.perf_counter() - t0
-            entry = CachedExecutable(key, bundle, compiled, dt)
+            t2 = time.perf_counter()
+            entry = CachedExecutable(key, bundle, compiled,
+                                     compile_seconds=t2 - t1,
+                                     lower_seconds=t1 - t0)
             with self._lock:
                 self.lowerings += 1
                 self.compiles += 1
-                self.compile_seconds += dt
+                self.compile_seconds += t2 - t0
                 if self.max_entries is not None and \
                         len(self._entries) >= self.max_entries:
                     # FIFO eviction: serving uses a small closed set of

@@ -27,9 +27,6 @@ from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh
-
-from repro.dist.sharding import ShardingRules, init_params, specs_to_shardings
 
 BucketShape = Tuple[int, int]        # (batch, max_len)
 
@@ -43,28 +40,27 @@ class _BucketPool:
 
 
 class StatePool:
-    """Pools of decode-state pytrees, one per (batch, max_len) bucket."""
+    """Pools of decode-state pytrees, one per (batch, max_len) bucket.
 
-    def __init__(self, model, mesh: Mesh, rules: ShardingRules):
-        self.model = model
-        self.mesh = mesh
-        self.rules = rules
+    A thin consumer of :class:`repro.plan.ExecutionPlan`: fresh state
+    allocation (shapes, shardings, stage placement of the layers dim) is
+    the plan's job; the pool only tracks reuse.
+    """
+
+    def __init__(self, plan):
+        self.plan = plan
         self._lock = threading.Lock()
         self._pools: Dict[BucketShape, _BucketPool] = {}
         self._reset_fns: Dict[BucketShape, Any] = {}
+
+    def _fresh(self, bucket: BucketShape):
+        batch, max_len = bucket
+        return self.plan.fresh_decode_state(batch, max_len)
 
     def _pool(self, bucket: BucketShape) -> _BucketPool:
         if bucket not in self._pools:
             self._pools[bucket] = _BucketPool(free=[])
         return self._pools[bucket]
-
-    def _fresh(self, bucket: BucketShape):
-        batch, max_len = bucket
-        sspecs = self.model.decode_state_specs(batch, max_len)
-        return jax.device_put(
-            init_params(jax.random.PRNGKey(0), sspecs),
-            specs_to_shardings(sspecs, self.mesh, self.rules),
-        )
 
     def _reset(self, bucket: BucketShape, state):
         """Zero a released state in place (buffers donated and recycled)."""

