@@ -7,6 +7,13 @@ warm tokens/sec plus p50/p99 dispatch latency. Run standalone to emit
 
     PYTHONPATH=src python -m benchmarks.serve_latency [--out BENCH_serve.json]
 
+The ``churn`` section races the two schedulers on an identical
+mixed-length request trace (every eighth request rides 14x longer than
+its neighbours — the worst case for fixed FIFO groups, whose short
+requests idle their slots until the long rider finishes): warm
+tokens/sec for ``schedule="fifo"`` vs ``schedule="continuous"``, the
+speedup ratio, busy-slot fractions, and p50/p99 per-slot idle time.
+
 Also exposes ``run()`` rows for the ``benchmarks.run`` CSV harness.
 """
 
@@ -14,14 +21,110 @@ from __future__ import annotations
 
 import argparse
 import json
+import time
 
 from repro.configs import reduced_config
 from repro.plan import MeshSpec, build_plan
-from repro.serve import DecodeRequest
+from repro.serve import Bucket, BucketPolicy, DecodeRequest
 
 WAVES = 4          # warm waves measured (one cold wave discarded)
 TOKENS = 8         # generated per request
 ARCH = "yi_6b"
+
+# churn trace: one long rider per eight requests, interleaved, so every
+# FIFO group of 8 idles seven slots behind the rider
+CHURN_BATCH = 8
+CHURN_MAX_LEN = 64
+CHURN_PATTERN = (28, 2, 2, 2, 2, 2, 2, 2)   # max_new_tokens mod 8
+CHURN_REQUESTS = 24                # per wave
+
+
+def churn_requests(tag: str, n: int = CHURN_REQUESTS):
+    reqs = []
+    for i in range(n):
+        plen = 2 + (i % 3)
+        reqs.append(DecodeRequest(
+            f"{tag}-{i}", [1 + (i + j) % 7 for j in range(plen)],
+            max_new_tokens=CHURN_PATTERN[i % len(CHURN_PATTERN)]))
+    return reqs
+
+
+def _sched_counters(s) -> dict:
+    return {
+        "dispatches": s.dispatches, "steps": s.steps,
+        "admissions": s.admissions, "slot_steps": s.slot_steps,
+        "idle_slot_steps": s.idle_slot_steps, "refills": s.refills,
+        "refill_gap_total": s.refill_gap_total,
+    }
+
+
+def measure_churn(waves: int = 3) -> dict:
+    """Race fifo vs continuous on the same mixed-length trace (warm)."""
+    cfg = reduced_config(ARCH).with_(n_layers=2, vocab=64)
+    policy = BucketPolicy([Bucket(CHURN_MAX_LEN, CHURN_BATCH)])
+    out = {}
+    tokens_ref = None
+    for schedule in ("fifo", "continuous"):
+        plan = build_plan(cfg, None, mesh_spec=MeshSpec.debug(1, 1))
+        with plan.activate():
+            b = plan.make_batcher(policy=policy, schedule=schedule)
+            b.init_demo_params(seed=0)
+            for r in churn_requests("cold"):
+                b.submit(r)
+            b.run()                        # compile + warm the bucket
+            b.metrics = {}                 # keep warm-path numbers only
+            warm_cache = dict(b.cache.stats())
+            cold_sched = (_sched_counters(b.scheduler)
+                          if b.scheduler is not None else None)
+            t0 = time.perf_counter()
+            tokens = 0
+            for w in range(waves):
+                for r in churn_requests(f"warm{w}"):
+                    b.submit(r)
+                res = b.run()
+                tokens += sum(len(r.tokens) for r in res.values())
+            dt = time.perf_counter() - t0
+        after = b.cache.stats()
+        label = policy.buckets[0].label
+        m = b.stats()["buckets"][label]
+        steps = m["slot_steps"] / CHURN_BATCH
+        sec_per_step = dt / steps if steps else 0.0
+        entry = {
+            "tokens": tokens,
+            "seconds": round(dt, 4),
+            "tokens_per_second": round(tokens / dt, 2) if dt else 0.0,
+            "busy_slot_fraction": m["busy_slot_fraction"],
+            "p50_slot_idle_s": round(
+                m["p50_slot_idle_steps"] * sec_per_step, 5),
+            "p99_slot_idle_s": round(
+                m["p99_slot_idle_steps"] * sec_per_step, 5),
+            "new_lowerings_after_warmup":
+                after["lowerings"] - warm_cache["lowerings"],
+        }
+        if b.scheduler is not None:
+            # warm-only, like every sibling field: subtract the discarded
+            # cold wave's counters before deriving the ratios
+            warm = {k: v - cold_sched[k]
+                    for k, v in _sched_counters(b.scheduler).items()}
+            warm["busy_slot_fraction"] = round(
+                1 - warm["idle_slot_steps"] / warm["slot_steps"], 4) \
+                if warm["slot_steps"] else 0.0
+            warm["mean_refill_gap"] = round(
+                warm.pop("refill_gap_total") / warm["refills"], 3) \
+                if warm["refills"] else 0.0
+            entry["scheduler"] = warm
+        out[schedule] = entry
+        if tokens_ref is None:
+            tokens_ref = tokens
+        else:
+            assert tokens == tokens_ref, (
+                "schedulers generated different token counts for the "
+                f"same trace: {tokens} vs {tokens_ref}")
+    out["speedup"] = round(
+        out["continuous"]["tokens_per_second"]
+        / out["fifo"]["tokens_per_second"], 3) \
+        if out["fifo"]["tokens_per_second"] else 0.0
+    return out
 
 
 def measure(waves: int = WAVES, tokens: int = TOKENS) -> dict:
@@ -65,6 +168,7 @@ def measure(waves: int = WAVES, tokens: int = TOKENS) -> dict:
         "warm_cache": stats["cache"],
         "buckets": buckets,
         "pool": stats["pool"],
+        "churn": measure_churn(),
     }
 
 
@@ -101,6 +205,15 @@ def main():
         print(f"{label}: {m['tokens_per_second']} tok/s warm, "
               f"p50 {m['p50_latency_s']}s p99 {m['p99_latency_s']}s, "
               f"{m['us_per_token']} us/token")
+    churn = data["churn"]
+    for schedule in ("fifo", "continuous"):
+        c = churn[schedule]
+        print(f"churn/{schedule}: {c['tokens_per_second']} tok/s, busy "
+              f"slot fraction {c['busy_slot_fraction']}, p99 slot idle "
+              f"{c['p99_slot_idle_s']}s")
+    print(f"churn speedup continuous/fifo: {churn['speedup']}x")
+    assert churn["continuous"]["new_lowerings_after_warmup"] == 0, \
+        "continuous scheduler lowered after warmup under churn"
     print(f"wrote {args.out} (cache hits={hits}, "
           f"compiles={data['warm_cache']['compiles']})")
 

@@ -29,6 +29,10 @@ Flags:
                (shifts calibrated from the loaded weights by the plan's
                Quantize pass)
   --rounds     request waves to dispatch (default 2: warm + cache-hit)
+  --schedule   fifo (fixed dispatch groups, default) | continuous
+               (slot reuse inside in-flight dispatches via the
+               ContinuousScheduler — one masked decode executable per
+               bucket)
 """
 
 from __future__ import annotations
@@ -51,7 +55,7 @@ def build_batcher(args) -> ServeBatcher:
         policy = BucketPolicy.production(shape.global_batch, shape.seq_len)
     plan = build_plan(args.arch, None, mode=args.mode, mesh_spec=mesh_spec,
                       quantized=args.quantized, debug=args.debug)
-    batcher = plan.make_batcher(policy=policy)
+    batcher = plan.make_batcher(policy=policy, schedule=args.schedule)
     with plan.activate():
         batcher.init_demo_params(seed=0)
     return batcher
@@ -80,6 +84,10 @@ def main():
                          "down-projection (calibrated shifts)")
     ap.add_argument("--rounds", type=int, default=2,
                     help="request waves (2nd+ hit the executable cache)")
+    ap.add_argument("--schedule", default="fifo",
+                    choices=["fifo", "continuous"],
+                    help="fixed FIFO dispatch groups, or continuous "
+                         "batching with in-flight slot reuse")
     args = ap.parse_args()
     if args.tokens < 1:
         ap.error("--tokens must be >= 1")
@@ -88,10 +96,13 @@ def main():
 
     batcher = build_batcher(args)
     batch = batcher.policy.buckets[0].batch
+    # continuous batching is about refilling freed slots from a deep
+    # queue: submit two requests per slot so slot reuse is observable
+    wave_size = batch * 2 if args.schedule == "continuous" else batch
     t_first = None
     with batcher.plan.activate():
         for wave in range(args.rounds):
-            for i in range(batch):
+            for i in range(wave_size):
                 batcher.submit(DecodeRequest(
                     f"w{wave}r{i}", [1 + (i + j) % 7 for j in range(i % 3 + 2)],
                     max_new_tokens=args.tokens))
@@ -109,6 +120,12 @@ def main():
               f"{m['new_tokens']} tokens, "
               f"{m['tokens_per_second']:.1f} tok/s host-sim, "
               f"p50 {m['p50_latency_s']:.3f}s p99 {m['p99_latency_s']:.3f}s")
+    if "scheduler" in stats:
+        s = stats["scheduler"]
+        print(f"scheduler: {s['admissions']} admissions over "
+              f"{s['dispatches']} dispatches, busy slot fraction "
+              f"{s['busy_slot_fraction']}, mean refill gap "
+              f"{s['mean_refill_gap']} steps")
     c = stats["cache"]
     first = f"{t_first:.2f}s" if t_first is not None else "n/a"
     print(f"{batcher.cfg.name}: first token {first}; cache entries="

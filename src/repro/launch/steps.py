@@ -25,7 +25,13 @@ from repro.dist.sharding import (
     sharding_ctx,
     specs_to_shardings,
 )
-from repro.models.base import ArchConfig, ShapeSpec, build_model
+from repro.models.base import (
+    ArchConfig,
+    ShapeSpec,
+    build_model,
+    state_batch_axes,
+    wipe_state_slots,
+)
 from repro.optim.optimizers import make_optimizer
 
 
@@ -256,6 +262,77 @@ def make_prefill_decode_step(cfg: ArchConfig, batch: int, prefill_len: int,
             abstract_params(pspecs), abstract_params(sspecs),
             jax.ShapeDtypeStruct((batch, prefill_len), jnp.int32),
             jax.ShapeDtypeStruct((batch,), jnp.int32),
+        ),
+        mesh=mesh,
+        rules=rules,
+        donate_argnums=(1,),
+    )
+
+
+def make_masked_decode_step(cfg: ArchConfig, batch: int, max_len: int,
+                            mesh: Mesh, mode: Optional[str] = None, *,
+                            rules: Optional[ShardingRules] = None
+                            ) -> LoweringBundle:
+    """Slot-masked decode step for continuous batching (one executable
+    per bucket, shape-stable under churn — zero lowerings after warmup).
+
+    Unlike ``make_serve_step`` (whole group in lockstep from position 0),
+    this step lets every batch lane be at a different point in a request
+    lifecycle while the compiled program never changes shape. Per-slot
+    lanes:
+
+    * ``fresh[b]``  — slot ``b`` was just (re)admitted: its KV/SSM state
+      lanes are zeroed in-step (buffers donated, so the reset is in
+      place) before anything reads them, so a reused slot can never see
+      its predecessor's cache;
+    * ``start[b]``  — the global position the slot's request began at;
+      attention is windowed to ``[start[b], pos]``. RoPE scores depend
+      only on relative position, so a request admitted mid-dispatch
+      decodes exactly as it would from position 0;
+    * ``feed[b]``   — teacher-forcing lane for eager prefill: ``>= 0``
+      feeds this prompt token (the slot is still prefilling while its
+      neighbours decode), ``-1`` continues from the slot's previous
+      argmax ``prev[b]``;
+    * ``active[b]`` — idle slots emit token 0 and their writes land
+      outside every other slot's window, so they are harmless.
+
+    Inputs:  (params, state, feed [B] i32, prev [B] i32, pos [] i32,
+              start [B] i32, active [B] bool, fresh [B] bool)
+    Outputs: (tok [B] i32 — the greedy argmax for active slots, 0
+              elsewhere — and the updated state)
+    """
+    rules = _resolve_rules(cfg, mode, rules)
+    model = build_model(cfg)
+    pspecs = model.param_specs()
+    sspecs = model.decode_state_specs(batch, max_len)
+
+    batch_axes = state_batch_axes(sspecs)
+
+    def masked_step(params, state, feed, prev, pos, start, active, fresh):
+        state = wipe_state_slots(state, fresh, batch_axes)
+        tok_in = jnp.where(feed >= 0, feed, prev).astype(jnp.int32)
+        logits, state = model.decode_step(params, state, tok_in, pos,
+                                          window_start=start)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        return jnp.where(active, tok, 0), state
+
+    param_sh = specs_to_shardings(pspecs, mesh, rules)
+    state_sh = specs_to_shardings(sspecs, mesh, rules)
+    lane_sh = NamedSharding(
+        mesh, fit_pspec((batch,),
+                        logical_to_pspec(("batch",), mesh, rules), mesh))
+    pos_sh = NamedSharding(mesh, P())
+    lane_i32 = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    lane_bool = jax.ShapeDtypeStruct((batch,), jnp.bool_)
+    return LoweringBundle(
+        fn=masked_step,
+        in_shardings=(param_sh, state_sh, lane_sh, lane_sh, pos_sh,
+                      lane_sh, lane_sh, lane_sh),
+        out_shardings=(lane_sh, state_sh),
+        abstract_inputs=(
+            abstract_params(pspecs), abstract_params(sspecs),
+            lane_i32, lane_i32, jax.ShapeDtypeStruct((), jnp.int32),
+            lane_i32, lane_bool, lane_bool,
         ),
         mesh=mesh,
         rules=rules,

@@ -215,8 +215,16 @@ def decode_self_attention(
     n_kv: int,
     head_dim: int,
     rope_theta: float = 10000.0,
+    window_start: Optional[jnp.ndarray] = None,   # [B] int32 or None
 ):
     """One decode step: project, rotate, append to cache, attend over cache.
+
+    ``window_start`` restricts sequence ``b`` to cache positions
+    ``[window_start[b], pos]`` — the continuous-batching contract where a
+    reused slot's request began at a nonzero global position and must
+    never see its predecessor's KV. RoPE scores depend only on relative
+    position, so a request windowed at ``s`` attends exactly as it would
+    from position 0. ``None`` keeps the classic full-prefix window.
 
     Returns (out [B,1,d], new_cache_k, new_cache_v).
     """
@@ -233,6 +241,9 @@ def decode_self_attention(
     cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v, pos, axis=1)
     kv_valid = (jnp.arange(S)[None, :] <= pos).astype(bool)
     kv_valid = jnp.broadcast_to(kv_valid, (B, S))
+    if window_start is not None:
+        kv_valid = kv_valid & (
+            jnp.arange(S)[None, :] >= window_start[:, None])
     o = mha(q, cache_k, cache_v, causal=False, kv_valid=kv_valid)
     out = linear(params["wo"], o.reshape(B, 1, n_heads * head_dim))
     return out, cache_k, cache_v

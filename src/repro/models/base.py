@@ -127,6 +127,40 @@ def stackify(tree, n: int):
     )
 
 
+def state_batch_axes(sspecs):
+    """Per-leaf index of the "batch" logical axis in a decode-state tree.
+
+    Continuous batching resets ONE batch lane of a live state (a reused
+    slot must not inherit its predecessor's KV/SSM); the specs name the
+    batch axis logically, so the lookup works for KV caches and SSM/conv
+    states alike. Shared by the in-step fresh lane
+    (``make_masked_decode_step``) and the host-side
+    ``StatePool.reset_slots`` so the two resets can never diverge.
+    """
+    return jax.tree.map(
+        lambda s: s.logical.index("batch"), sspecs,
+        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def wipe_state_slots(state, slot_mask, batch_axes):
+    """Zero the masked batch lanes of every state leaf.
+
+    ``slot_mask`` is a [batch] bool vector; ``batch_axes`` comes from
+    :func:`state_batch_axes` over the matching decode-state specs.
+    Traceable (used inside the masked decode step) and jit-friendly with
+    donation (used by the pool's per-slot reset).
+    """
+    batch = slot_mask.shape[0]
+
+    def one(leaf, axis):
+        shape = [1] * leaf.ndim
+        shape[axis] = batch
+        return jnp.where(slot_mask.reshape(shape), jnp.zeros_like(leaf),
+                         leaf)
+
+    return jax.tree.map(one, state, batch_axes)
+
+
 def build_model(cfg: ArchConfig):
     if cfg.family in ("dense", "moe"):
         from repro.models.lm import DecoderLM

@@ -89,12 +89,14 @@ def attn_block_decode(
     cache_v: jnp.ndarray,
     pos: jnp.ndarray,
     cfg: ArchConfig,
+    *,
+    window_start: Optional[jnp.ndarray] = None,   # [B] int32 slot windows
 ):
     h = rmsnorm(params["ln1"], x)
     h, ck, cv = decode_self_attention(
         params["attn"], h, cache_k, cache_v, pos,
         n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.head_dim,
-        rope_theta=cfg.rope_theta,
+        rope_theta=cfg.rope_theta, window_start=window_start,
     )
     x = x + h
     h = rmsnorm(params["ln2"], x)

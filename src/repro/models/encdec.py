@@ -152,7 +152,8 @@ class EncDecLM:
             "cross_v": ParamSpec(xkv, axes, jnp.bfloat16, "zeros"),
         }
 
-    def decode_step(self, params, state: Dict, tokens, pos):
+    def decode_step(self, params, state: Dict, tokens, pos, *,
+                    window_start=None):
         cfg = self.cfg
         x = embed(params["embed"], tokens[:, None])
         B = x.shape[0]
@@ -163,6 +164,7 @@ class EncDecLM:
             h, ck, cv = decode_self_attention(
                 layer_params["attn"], h, ck, cv, pos,
                 n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.head_dim,
+                window_start=window_start,
             )
             x = x + h
             h = layernorm(layer_params["ln_x"], x)

@@ -119,7 +119,8 @@ class HybridModel:
                 jnp.bfloat16, "zeros"),
         }
 
-    def decode_step(self, params, state: Dict, tokens, pos):
+    def decode_step(self, params, state: Dict, tokens, pos, *,
+                    window_start=None):
         cfg = self.cfg
         x = embed(params["embed"], tokens[:, None])
         shared = params["shared_attn"]
@@ -139,7 +140,8 @@ class HybridModel:
             x, (ssm_states, conv_states) = jax.lax.scan(
                 inner, x, (mamba_stack, ssm_states, conv_states)
             )
-            x, ck, cv = attn_block_decode(shared, x, ck, cv, pos, cfg)
+            x, ck, cv = attn_block_decode(shared, x, ck, cv, pos, cfg,
+                                          window_start=window_start)
             return x, (ssm_states, conv_states, ck, cv)
 
         x, (ssm, conv, ck, cv) = jax.lax.scan(

@@ -89,14 +89,21 @@ class DecoderLM:
         }
 
     def decode_step(self, params, state: Dict, tokens: jnp.ndarray,
-                    pos: jnp.ndarray):
-        """One token for every sequence. tokens [B] int32; pos [] int32."""
+                    pos: jnp.ndarray, *, window_start=None):
+        """One token for every sequence. tokens [B] int32; pos [] int32.
+
+        ``window_start`` ([B] int32, optional) limits each slot's
+        attention to cache positions >= its own window start — the
+        continuous-batching slot-reuse contract (see
+        ``make_masked_decode_step``).
+        """
         cfg = self.cfg
         x = embed(params["embed"], tokens[:, None])
 
         def body(x, inp):
             layer_params, ck, cv = inp
-            x, ck, cv = attn_block_decode(layer_params, x, ck, cv, pos, cfg)
+            x, ck, cv = attn_block_decode(layer_params, x, ck, cv, pos, cfg,
+                                          window_start=window_start)
             return x, (ck, cv)
 
         x, (ck, cv) = jax.lax.scan(

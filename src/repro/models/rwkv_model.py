@@ -97,9 +97,11 @@ class RWKVModel:
                              jnp.float32, "zeros"),
         }
 
-    def decode_step(self, params, state: Dict, tokens, pos):
+    def decode_step(self, params, state: Dict, tokens, pos, *,
+                    window_start=None):
         cfg = self.cfg
-        del pos  # recurrent: position-free
+        del pos, window_start  # recurrent: position-free; slot reuse only
+        # needs the fresh-lane state reset (no KV cache to window)
         x = embed(params["embed"], tokens[:, None])
         x = layernorm(params["ln0"], x)
 

@@ -116,7 +116,8 @@ class VisionLM:
         ks, vs = jax.vmap(one)(params["cross_blocks"])
         return ks, vs
 
-    def decode_step(self, params, state: Dict, tokens, pos):
+    def decode_step(self, params, state: Dict, tokens, pos, *,
+                    window_start=None):
         cfg = self.cfg
         x = embed(params["embed"], tokens[:, None])
         B = x.shape[0]
@@ -127,7 +128,7 @@ class VisionLM:
             def inner(x, inp2):
                 layer_params, k1, v1 = inp2
                 x, k1, v1 = attn_block_decode(layer_params, x, k1, v1, pos,
-                                              cfg)
+                                              cfg, window_start=window_start)
                 return x, (k1, v1)
 
             x, (ck, cv) = jax.lax.scan(inner, x, (selfs, ck, cv))

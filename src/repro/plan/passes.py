@@ -329,6 +329,10 @@ def compile_pass(ir: PlanIR) -> PlanIR:
                                   "seq_len": "per-bucket"})
         cat["prefill"] = {"batch": "per-bucket", "seq_len": "per-bucket",
                           "note": "prefill->decode scan handoff"}
+        cat["masked_decode"] = {
+            "batch": "per-bucket", "seq_len": "per-bucket",
+            "note": "slot-masked continuous-batching step",
+        }
     ir.executables = cat
     ir.record("Compile", kinds=sorted(cat), cache="serve.ExecutableCache",
               aot=True)

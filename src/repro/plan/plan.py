@@ -34,6 +34,7 @@ from repro.dist.sharding import (
     specs_to_shardings,
 )
 from repro.launch.steps import (
+    make_masked_decode_step,
     make_prefill_decode_step,
     make_prefill_step,
     make_serve_step,
@@ -210,8 +211,11 @@ class ExecutionPlan:
     def serve_executable(self, kind: str, *, batch: int, max_len: int,
                          prefill_len: int = 0) -> CachedExecutable:
         """A bucketed serving executable: ``kind`` is "decode" (single
-        token against resident state) or "prefill" (the prefill->decode
-        scan handoff padded to ``prefill_len``)."""
+        token against resident state), "prefill" (the prefill->decode
+        scan handoff padded to ``prefill_len``), or "masked_decode" (the
+        slot-masked continuous-batching step — per-slot active/fresh
+        lanes and attention windows, one shape-stable executable per
+        bucket)."""
         if kind == "decode":
             shape = ShapeSpec(f"b{batch}xl{max_len}", max_len, batch,
                               "decode")
@@ -221,6 +225,9 @@ class ExecutionPlan:
             build = lambda: make_prefill_decode_step(  # noqa: E731
                 self.cfg, batch, prefill_len, max_len, self.mesh,
                 rules=self.rules)
+        elif kind == "masked_decode":
+            build = lambda: make_masked_decode_step(  # noqa: E731
+                self.cfg, batch, max_len, self.mesh, rules=self.rules)
         else:
             raise ValueError(f"unknown serve executable kind {kind!r}")
         key = self._key(kind, batch, max_len, prefill_len)

@@ -4,11 +4,15 @@ Public surface:
 
 * :class:`~repro.serve.batcher.ServeBatcher` — admit
   :class:`~repro.serve.batcher.DecodeRequest`s, dispatch bucketed groups
-  through cached prefill/decode executables.
+  through cached prefill/decode executables (``schedule="fifo"``) or the
+  continuous slot-reuse scheduler (``schedule="continuous"``).
+* :class:`~repro.serve.scheduler.ContinuousScheduler` — iteration-level
+  scheduling: freed slots are refilled inside an in-flight dispatch via
+  the slot-masked decode executable.
 * :class:`~repro.serve.cache.ExecutableCache` — process-wide
   ``lower().compile()`` cache with hit/miss/lowering/compile counters.
 * :class:`~repro.serve.state_pool.StatePool` — per-bucket resident
-  KV-cache/SSM state pools.
+  KV-cache/SSM state pools, with donated whole-state and per-slot resets.
 
 See docs/serving.md for the bucket policy, cache keys, and lifecycle.
 """
@@ -22,6 +26,7 @@ from repro.serve.batcher import (
     ServeBatcher,
 )
 from repro.serve.cache import CachedExecutable, CacheKey, ExecutableCache
+from repro.serve.scheduler import ContinuousScheduler, SlotEvent
 from repro.serve.state_pool import StatePool
 
 __all__ = [
@@ -30,9 +35,11 @@ __all__ = [
     "BucketPolicy",
     "CacheKey",
     "CachedExecutable",
+    "ContinuousScheduler",
     "DecodeRequest",
     "ExecutableCache",
     "RequestResult",
     "ServeBatcher",
+    "SlotEvent",
     "StatePool",
 ]

@@ -18,6 +18,13 @@ into resident state while already generating for short sequences, and one
 both served from the process-wide :class:`ExecutableCache` and fed from
 the per-bucket :class:`StatePool`. After warmup a dispatch performs zero
 lowerings and zero compiles; the cache counters prove it.
+
+This fixed-group FIFO path is the ``schedule="fifo"`` default;
+``schedule="continuous"`` routes ``run()`` through the
+:class:`~repro.serve.scheduler.ContinuousScheduler`, which reuses slots
+INSIDE an in-flight dispatch (masked per-slot lanes over one
+``make_masked_decode_step`` executable per bucket) instead of idling them
+until the group's longest request finishes. See docs/serving.md.
 """
 
 from __future__ import annotations
@@ -132,15 +139,25 @@ class BucketMetrics:
     new_tokens: int = 0
     prefill_seconds: float = 0.0
     decode_seconds: float = 0.0
+    # slot occupancy: every (slot, step) of every dispatch is a lane-step;
+    # busy lane-steps carried a request's prompt or generated token. The
+    # gap between them is exactly what continuous batching reclaims.
+    slot_steps: int = 0
+    busy_slot_steps: int = 0
     # bounded: a resident server must not grow one float per request
     latencies: Deque[float] = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=_LATENCY_WINDOW))
+    # per-slot idle steps, one entry per (dispatch, slot)
+    slot_idle: Deque[int] = dataclasses.field(
         default_factory=lambda: collections.deque(maxlen=_LATENCY_WINDOW))
 
     def summary(self) -> Dict[str, float]:
         lat = sorted(self.latencies)
+        idle = sorted(self.slot_idle)
 
-        def pct(p):
-            return lat[min(len(lat) - 1, int(p * len(lat)))] if lat else 0.0
+        def pct(vals, p):
+            return vals[min(len(vals) - 1, int(p * len(vals)))] \
+                if vals else 0.0
 
         busy = self.prefill_seconds + self.decode_seconds
         return {
@@ -150,10 +167,16 @@ class BucketMetrics:
             "new_tokens": self.new_tokens,
             "prefill_seconds": round(self.prefill_seconds, 4),
             "decode_seconds": round(self.decode_seconds, 4),
-            "p50_latency_s": round(pct(0.50), 4),
-            "p99_latency_s": round(pct(0.99), 4),
+            "p50_latency_s": round(pct(lat, 0.50), 4),
+            "p99_latency_s": round(pct(lat, 0.99), 4),
             "tokens_per_second": round(self.new_tokens / busy, 2)
             if busy else 0.0,
+            "slot_steps": self.slot_steps,
+            "busy_slot_fraction": round(
+                self.busy_slot_steps / self.slot_steps, 4)
+            if self.slot_steps else 0.0,
+            "p50_slot_idle_steps": pct(idle, 0.50),
+            "p99_slot_idle_steps": pct(idle, 0.99),
         }
 
 
@@ -174,7 +197,8 @@ class ServeBatcher:
                  mesh: Optional[Mesh] = None, *,
                  quantized: bool = False,
                  policy: Optional[BucketPolicy] = None,
-                 cache: Optional[ExecutableCache] = None):
+                 cache: Optional[ExecutableCache] = None,
+                 schedule: str = "fifo"):
         from repro.plan import ExecutionPlan, build_plan
 
         if isinstance(plan_or_cfg, ExecutionPlan):
@@ -190,12 +214,28 @@ class ServeBatcher:
                 raise ValueError("ServeBatcher(cfg, mesh) needs a mesh")
             self.plan = build_plan(plan_or_cfg, None, mesh_spec=mesh,
                                    quantized=quantized, cache=cache)
+        if schedule not in ("fifo", "continuous"):
+            raise ValueError(
+                f"schedule must be 'fifo' or 'continuous', got {schedule!r}")
+        self.schedule = schedule
         self.policy = policy or BucketPolicy.debug()
         self.pool = StatePool(self.plan)
         self.params = None
         self.metrics: Dict[str, BucketMetrics] = {}
         self._pending: Deque[DecodeRequest] = collections.deque()
+        self._pending_ids: set = set()
         self._argmax_fns: Dict[str, object] = {}
+        self._scheduler = None
+        if schedule == "continuous":
+            from repro.serve.scheduler import ContinuousScheduler
+
+            self._scheduler = ContinuousScheduler(self.plan, self.policy,
+                                                  self.pool)
+
+    @property
+    def scheduler(self):
+        """The ContinuousScheduler (None under schedule="fifo")."""
+        return self._scheduler
 
     # plan views (kept as attributes of record for tests/telemetry)
     @property
@@ -234,26 +274,48 @@ class ServeBatcher:
 
     def submit(self, request: DecodeRequest) -> str:
         self.policy.bucket_for(request.need_len)   # reject unservable now
+        if request.request_id in self._pending_ids:
+            # silently accepting a duplicate id would last-write-win in
+            # the results dict and one caller would lose their tokens
+            raise ValueError(
+                f"duplicate request id {request.request_id!r}: a request "
+                "with this id is already queued")
+        self._pending_ids.add(request.request_id)
         self._pending.append(request)
         return request.request_id
 
     def warmup(self, bucket: Bucket, prompt_len: int = 1) -> None:
         """Compile a bucket's executables ahead of traffic."""
-        self._executable("prefill", bucket, self._prefill_len(prompt_len))
-        self._executable("decode", bucket, 0)
+        if self.schedule == "continuous":
+            self._executable("masked_decode", bucket, 0)
+        else:
+            self._executable("prefill", bucket,
+                             self._prefill_len(prompt_len))
+            self._executable("decode", bucket, 0)
 
     # -- dispatch -------------------------------------------------------------
 
     def run(self) -> Dict[str, RequestResult]:
-        """Drain the queue: group -> dispatch until empty."""
+        """Drain the queue: group -> dispatch until empty.
+
+        ``schedule="continuous"`` hands the whole queue to the
+        :class:`~repro.serve.scheduler.ContinuousScheduler` (slot reuse
+        inside in-flight dispatches); the default fixed-group FIFO path
+        below is kept as the fallback.
+        """
         if self.params is None:
             raise RuntimeError("no parameters loaded "
                                "(load_params / init_demo_params)")
         results: Dict[str, RequestResult] = {}
-        while self._pending:
-            group, bucket = self._form_group()
-            for res in self._dispatch(group, bucket):
-                results[res.request_id] = res
+        if self._scheduler is not None:
+            results = self._scheduler.run(self._pending, self.params,
+                                          self.metrics)
+        else:
+            while self._pending:
+                group, bucket = self._form_group()
+                for res in self._dispatch(group, bucket):
+                    results[res.request_id] = res
+        self._pending_ids.difference_update(results)
         return results
 
     def _form_group(self):
@@ -357,13 +419,28 @@ class ServeBatcher:
         m.prefill_seconds += t_prefill
         m.decode_seconds += t_total - t_prefill
         m.latencies.extend([t_total] * len(group))
+        # slot occupancy: the group runs P prefill + `steps` decode
+        # positions in lockstep; a slot is busy while it still carries
+        # prompt or requested tokens, idle from its finish to group end
+        span = P + steps
+        m.slot_steps += span * B
+        for slot in range(B):
+            busy_slot = 0
+            if slot < len(group):
+                req, res = group[slot], results[slot]
+                busy_slot = min(span, len(req.prompt) + len(res.tokens) - 1)
+            m.busy_slot_steps += busy_slot
+            m.slot_idle.append(span - busy_slot)
         return results
 
     # -- observability --------------------------------------------------------
 
     def stats(self) -> Dict[str, object]:
-        return {
+        out = {
             "cache": self.cache.stats(),
             "pool": self.pool.stats(),
             "buckets": {k: m.summary() for k, m in self.metrics.items()},
         }
+        if self._scheduler is not None:
+            out["scheduler"] = self._scheduler.stats()
+        return out

@@ -52,6 +52,8 @@ class StatePool:
         self._lock = threading.Lock()
         self._pools: Dict[BucketShape, _BucketPool] = {}
         self._reset_fns: Dict[BucketShape, Any] = {}
+        self._slot_reset_fns: Dict[BucketShape, Any] = {}
+        self.slot_resets = 0
 
     def _fresh(self, bucket: BucketShape):
         batch, max_len = bucket
@@ -89,6 +91,34 @@ class StatePool:
         if state is None:
             return self._fresh(bucket)
         return self._reset(bucket, state)
+
+    def reset_slots(self, batch: int, max_len: int, state, slot_mask):
+        """Zero selected batch lanes of a LIVE state pytree, in place.
+
+        The continuous scheduler's admission-time reset: when a finished
+        request frees slot ``b`` mid-dispatch, the next request must not
+        inherit its KV/SSM lanes. ``slot_mask`` is a [batch] bool vector;
+        the per-bucket jitted reset donates the state, so the wipe reuses
+        the resident buffers (no reallocation, no executable-shape
+        change). Each state leaf's batch axis comes from the plan's
+        decode-state specs (``"batch"`` logical axis), so KV caches and
+        SSM/conv states are handled uniformly.
+        """
+        bucket = (batch, max_len)
+        fn = self._slot_reset_fns.get(bucket)
+        if fn is None:
+            from repro.models.base import state_batch_axes, wipe_state_slots
+
+            sspecs = self.plan.model.decode_state_specs(batch, max_len)
+            batch_axes = state_batch_axes(sspecs)
+            fn = jax.jit(
+                lambda state, mask: wipe_state_slots(state, mask,
+                                                     batch_axes),
+                donate_argnums=0)
+            self._slot_reset_fns[bucket] = fn
+        with self._lock:
+            self.slot_resets += 1
+        return fn(state, jnp.asarray(slot_mask, jnp.bool_))
 
     def release(self, batch: int, max_len: int, state) -> None:
         bucket = (batch, max_len)

@@ -297,7 +297,8 @@ def test_plan_serve_zero_new_lowerings_after_warmup(cfg):
     from repro.serve import DecodeRequest
 
     plan = build_plan(cfg, None, mesh_spec=MeshSpec.debug(1, 1))
-    assert set(plan.ir.executables) == {"decode", "prefill"}
+    assert set(plan.ir.executables) == {"decode", "prefill",
+                                        "masked_decode"}
     batcher = plan.make_batcher()
     with plan.activate():
         batcher.init_demo_params(0)

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from conftest import hypothesis_or_skip_stub
 
 from repro.configs import reduced_config
 from repro.dist.sharding import init_params
@@ -25,6 +26,9 @@ from repro.serve import (
     ServeBatcher,
     StatePool,
 )
+from repro.serve.batcher import _pow2ceil
+
+given, settings, st = hypothesis_or_skip_stub()
 
 
 @pytest.fixture(scope="module")
@@ -76,6 +80,79 @@ def test_request_validation():
 def test_submit_rejects_oversized_request(batcher):
     with pytest.raises(ValueError, match="positions"):
         batcher.submit(DecodeRequest("big", [1] * 300, 8))
+
+
+def test_submit_rejects_duplicate_request_id(cfg, mesh, params):
+    """Two queued requests with one id would last-write-win in results."""
+    with mesh:
+        b = ServeBatcher(cfg, mesh).load_params(params)
+        b.submit(DecodeRequest("dup", [1, 2], max_new_tokens=2))
+        with pytest.raises(ValueError, match="duplicate request id"):
+            b.submit(DecodeRequest("dup", [3, 4], max_new_tokens=2))
+        b.run()
+        # the id is free again once its result has been returned
+        b.submit(DecodeRequest("dup", [5, 6], max_new_tokens=2))
+        out = b.run()
+    assert len(out["dup"].tokens) == 2
+
+
+# ---------------------------------------------------------------------------
+# property-based: _pow2ceil and BucketPolicy.bucket_for
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(min_value=1, max_value=1 << 20))
+@settings(max_examples=200, deadline=None)
+def test_pow2ceil_minimal_covering_power(n):
+    p = _pow2ceil(n)
+    assert p >= n                          # covers
+    assert p & (p - 1) == 0                # a power of two
+    assert p == 1 or p // 2 < n            # and the SMALLEST such
+
+
+@given(st.integers(min_value=1, max_value=1 << 20),
+       st.integers(min_value=0, max_value=1 << 10))
+@settings(max_examples=100, deadline=None)
+def test_pow2ceil_monotone(n, delta):
+    assert _pow2ceil(n + delta) >= _pow2ceil(n)
+
+
+_BUCKET_LENS = st.lists(
+    st.integers(min_value=4, max_value=15).map(lambda e: 1 << e),
+    min_size=1, max_size=5, unique=True)
+
+
+@given(_BUCKET_LENS, st.integers(min_value=1, max_value=1 << 16))
+@settings(max_examples=200, deadline=None)
+def test_bucket_for_minimal_covering_bucket(lens, need):
+    policy = BucketPolicy([Bucket(n, 2) for n in lens])
+    fitting = [n for n in sorted(lens) if need <= n]
+    if not fitting:
+        # over-long requests are rejected at submit time, never queued
+        with pytest.raises(ValueError, match="positions"):
+            policy.bucket_for(need)
+        return
+    b = policy.bucket_for(need)
+    assert b.max_len == fitting[0]         # the smallest bucket that fits
+
+
+@given(_BUCKET_LENS,
+       st.integers(min_value=1, max_value=1 << 14),
+       st.integers(min_value=0, max_value=1 << 14))
+@settings(max_examples=100, deadline=None)
+def test_bucket_for_monotone_in_need(lens, need, delta):
+    """A larger request never lands in a smaller bucket."""
+    policy = BucketPolicy([Bucket(n, 2) for n in lens])
+    try:
+        small = policy.bucket_for(need)
+    except ValueError:
+        small = None
+    try:
+        big = policy.bucket_for(need + delta)
+    except ValueError:
+        return                              # bigger need may only overflow
+    assert small is not None               # need <= need+delta must fit too
+    assert big.max_len >= small.max_len
 
 
 # ---------------------------------------------------------------------------
@@ -251,6 +328,45 @@ def test_batcher_pool_cycles_states(batcher):
     """Every dispatch in the earlier tests released its state back."""
     stats = batcher.pool.stats()
     assert stats and all(p["in_use"] == 0 for p in stats.values())
+
+
+def test_state_pool_reuse_is_per_bucket(cfg, mesh):
+    """Buckets never share buffers: re-acquiring a released bucket reuses
+    (no fresh allocation), while a different shape allocates its own."""
+    from repro.plan import build_plan
+
+    pool = StatePool(build_plan(cfg, None, mesh_spec=mesh))
+    s64 = pool.acquire(2, 64)
+    pool.release(2, 64, s64)
+    s128 = pool.acquire(2, 128)            # different bucket: fresh
+    pool.release(2, 128, s128)
+    pool.acquire(2, 64)                    # released bucket: reused
+    pool.acquire(2, 128)
+    assert pool.stats()["2x64"] == {
+        "created": 1, "reused": 1, "in_use": 1, "free": 0}
+    assert pool.stats()["2x128"] == {
+        "created": 1, "reused": 1, "in_use": 1, "free": 0}
+
+
+def test_state_pool_reset_slots_no_leak(cfg, mesh):
+    """The donated per-slot reset wipes exactly the masked lanes — a
+    reused slot can never inherit its predecessor's KV — and leaves the
+    surviving requests' state bit-identical."""
+    from repro.plan import build_plan
+
+    pool = StatePool(build_plan(cfg, None, mesh_spec=mesh))
+    state = pool.acquire(2, 64)
+    dirty = jax.tree.map(lambda x: x + 1, state)     # both slots "used"
+    wiped = pool.reset_slots(2, 64, dirty, np.array([True, False]))
+    sspecs = pool.plan.model.decode_state_specs(2, 64)
+    leaves = jax.tree.leaves(wiped)
+    axes = [s.logical.index("batch") for s in jax.tree.leaves(
+        sspecs, is_leaf=lambda x: hasattr(x, "logical"))]
+    assert pool.slot_resets == 1
+    for leaf, axis in zip(leaves, axes):
+        arr = np.moveaxis(np.asarray(leaf, np.float32), axis, 0)
+        assert not arr[0].any()                      # slot 0 wiped clean
+        assert (arr[1] == 1.0).all()                 # slot 1 untouched
 
 
 # ---------------------------------------------------------------------------
