@@ -7,12 +7,15 @@ warm tokens/sec plus p50/p99 dispatch latency. Run standalone to emit
 
     PYTHONPATH=src python -m benchmarks.serve_latency [--out BENCH_serve.json]
 
-The ``churn`` section races the two schedulers on an identical
-mixed-length request trace (every eighth request rides 14x longer than
-its neighbours — the worst case for fixed FIFO groups, whose short
-requests idle their slots until the long rider finishes): warm
-tokens/sec for ``schedule="fifo"`` vs ``schedule="continuous"``, the
-speedup ratio, busy-slot fractions, and p50/p99 per-slot idle time.
+The ``churn`` section races the schedulers on an identical mixed-length
+request trace (every eighth request rides 14x longer than its
+neighbours — the worst case for fixed FIFO groups, whose short requests
+idle their slots until the long rider finishes): warm tokens/sec for
+``schedule="fifo"`` vs ``schedule="continuous"`` at ``steps_per_dispatch``
+(micro-run length) k in {1, 4, 8}, the speedup ratios, busy-slot
+fractions, and p50/p99 per-slot idle time. ``k_sweep`` summarizes
+tokens/s per k; ``speedup_k4_vs_k1`` is the micro-run amortization
+headline (CI asserts k=4 >= k=1).
 
 Also exposes ``run()`` rows for the ``benchmarks.run`` CSV harness.
 """
@@ -51,23 +54,35 @@ def churn_requests(tag: str, n: int = CHURN_REQUESTS):
 
 def _sched_counters(s) -> dict:
     return {
-        "dispatches": s.dispatches, "steps": s.steps,
+        "dispatches": s.dispatches, "micro_runs": s.micro_runs,
+        "steps": s.steps,
         "admissions": s.admissions, "slot_steps": s.slot_steps,
         "idle_slot_steps": s.idle_slot_steps, "refills": s.refills,
         "refill_gap_total": s.refill_gap_total,
     }
 
 
+# (label, schedule, steps_per_dispatch): "continuous" stays the k=1
+# entry so the fifo-vs-continuous speedup remains diffable across PRs
+CHURN_CONFIGS = (
+    ("fifo", "fifo", 1),
+    ("continuous", "continuous", 1),
+    ("continuous_k4", "continuous", 4),
+    ("continuous_k8", "continuous", 8),
+)
+
+
 def measure_churn(waves: int = 3) -> dict:
-    """Race fifo vs continuous on the same mixed-length trace (warm)."""
+    """Race fifo vs continuous micro-runs on one mixed-length trace."""
     cfg = reduced_config(ARCH).with_(n_layers=2, vocab=64)
     policy = BucketPolicy([Bucket(CHURN_MAX_LEN, CHURN_BATCH)])
     out = {}
     tokens_ref = None
-    for schedule in ("fifo", "continuous"):
+    for label, schedule, k in CHURN_CONFIGS:
         plan = build_plan(cfg, None, mesh_spec=MeshSpec.debug(1, 1))
         with plan.activate():
-            b = plan.make_batcher(policy=policy, schedule=schedule)
+            b = plan.make_batcher(policy=policy, schedule=schedule,
+                                  steps_per_dispatch=k)
             b.init_demo_params(seed=0)
             for r in churn_requests("cold"):
                 b.submit(r)
@@ -85,11 +100,12 @@ def measure_churn(waves: int = 3) -> dict:
                 tokens += sum(len(r.tokens) for r in res.values())
             dt = time.perf_counter() - t0
         after = b.cache.stats()
-        label = policy.buckets[0].label
-        m = b.stats()["buckets"][label]
+        m = b.stats()["buckets"][policy.buckets[0].label]
         steps = m["slot_steps"] / CHURN_BATCH
         sec_per_step = dt / steps if steps else 0.0
         entry = {
+            "schedule": schedule,
+            "steps_per_dispatch": k,
             "tokens": tokens,
             "seconds": round(dt, 4),
             "tokens_per_second": round(tokens / dt, 2) if dt else 0.0,
@@ -113,17 +129,29 @@ def measure_churn(waves: int = 3) -> dict:
                 warm.pop("refill_gap_total") / warm["refills"], 3) \
                 if warm["refills"] else 0.0
             entry["scheduler"] = warm
-        out[schedule] = entry
+        out[label] = entry
         if tokens_ref is None:
             tokens_ref = tokens
         else:
             assert tokens == tokens_ref, (
                 "schedulers generated different token counts for the "
                 f"same trace: {tokens} vs {tokens_ref}")
-    out["speedup"] = round(
-        out["continuous"]["tokens_per_second"]
-        / out["fifo"]["tokens_per_second"], 3) \
-        if out["fifo"]["tokens_per_second"] else 0.0
+
+    def ratio(a, b):
+        return round(a / b, 3) if b else 0.0
+
+    out["speedup"] = ratio(out["continuous"]["tokens_per_second"],
+                           out["fifo"]["tokens_per_second"])
+    out["k_sweep"] = {
+        str(k): out[label]["tokens_per_second"]
+        for label, schedule, k in CHURN_CONFIGS if schedule == "continuous"
+    }
+    out["speedup_k4_vs_k1"] = ratio(
+        out["continuous_k4"]["tokens_per_second"],
+        out["continuous"]["tokens_per_second"])
+    out["speedup_k8_vs_k1"] = ratio(
+        out["continuous_k8"]["tokens_per_second"],
+        out["continuous"]["tokens_per_second"])
     return out
 
 
@@ -206,14 +234,18 @@ def main():
               f"p50 {m['p50_latency_s']}s p99 {m['p99_latency_s']}s, "
               f"{m['us_per_token']} us/token")
     churn = data["churn"]
-    for schedule in ("fifo", "continuous"):
-        c = churn[schedule]
-        print(f"churn/{schedule}: {c['tokens_per_second']} tok/s, busy "
+    for label, _, _ in CHURN_CONFIGS:
+        c = churn[label]
+        print(f"churn/{label}: {c['tokens_per_second']} tok/s, busy "
               f"slot fraction {c['busy_slot_fraction']}, p99 slot idle "
               f"{c['p99_slot_idle_s']}s")
-    print(f"churn speedup continuous/fifo: {churn['speedup']}x")
-    assert churn["continuous"]["new_lowerings_after_warmup"] == 0, \
-        "continuous scheduler lowered after warmup under churn"
+    print(f"churn speedup continuous/fifo: {churn['speedup']}x; "
+          f"k4/k1: {churn['speedup_k4_vs_k1']}x; "
+          f"k8/k1: {churn['speedup_k8_vs_k1']}x")
+    for label, schedule, _ in CHURN_CONFIGS:
+        if schedule == "continuous":
+            assert churn[label]["new_lowerings_after_warmup"] == 0, \
+                f"{label} scheduler lowered after warmup under churn"
     print(f"wrote {args.out} (cache hits={hits}, "
           f"compiles={data['warm_cache']['compiles']})")
 

@@ -33,6 +33,12 @@ Flags:
                (slot reuse inside in-flight dispatches via the
                ContinuousScheduler — one masked decode executable per
                bucket)
+  --steps-per-dispatch
+               continuous micro-run length k: scan k masked steps per
+               executable call (amortizes dispatch overhead; long
+               prompts are chunk-prefilled k tokens per call). Needs
+               --schedule continuous when > 1; bucket max_len must be a
+               multiple of k. Default 1.
 """
 
 from __future__ import annotations
@@ -55,7 +61,8 @@ def build_batcher(args) -> ServeBatcher:
         policy = BucketPolicy.production(shape.global_batch, shape.seq_len)
     plan = build_plan(args.arch, None, mode=args.mode, mesh_spec=mesh_spec,
                       quantized=args.quantized, debug=args.debug)
-    batcher = plan.make_batcher(policy=policy, schedule=args.schedule)
+    batcher = plan.make_batcher(policy=policy, schedule=args.schedule,
+                                steps_per_dispatch=args.steps_per_dispatch)
     with plan.activate():
         batcher.init_demo_params(seed=0)
     return batcher
@@ -88,11 +95,19 @@ def main():
                     choices=["fifo", "continuous"],
                     help="fixed FIFO dispatch groups, or continuous "
                          "batching with in-flight slot reuse")
+    ap.add_argument("--steps-per-dispatch", type=int, default=1,
+                    help="continuous micro-run length k: scan k masked "
+                         "steps per executable call (>= 1; > 1 needs "
+                         "--schedule continuous)")
     args = ap.parse_args()
     if args.tokens < 1:
         ap.error("--tokens must be >= 1")
     if args.rounds < 1:
         ap.error("--rounds must be >= 1")
+    if args.steps_per_dispatch < 1:
+        ap.error("--steps-per-dispatch must be >= 1")
+    if args.steps_per_dispatch > 1 and args.schedule != "continuous":
+        ap.error("--steps-per-dispatch > 1 needs --schedule continuous")
 
     batcher = build_batcher(args)
     batch = batcher.policy.buckets[0].batch

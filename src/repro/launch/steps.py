@@ -271,36 +271,57 @@ def make_prefill_decode_step(cfg: ArchConfig, batch: int, prefill_len: int,
 
 def make_masked_decode_step(cfg: ArchConfig, batch: int, max_len: int,
                             mesh: Mesh, mode: Optional[str] = None, *,
-                            rules: Optional[ShardingRules] = None
+                            rules: Optional[ShardingRules] = None,
+                            steps_per_dispatch: int = 1
                             ) -> LoweringBundle:
-    """Slot-masked decode step for continuous batching (one executable
-    per bucket, shape-stable under churn — zero lowerings after warmup).
+    """Slot-masked decode micro-run for continuous batching (one
+    executable per (bucket, k), shape-stable under churn — zero
+    lowerings after warmup).
 
     Unlike ``make_serve_step`` (whole group in lockstep from position 0),
     this step lets every batch lane be at a different point in a request
-    lifecycle while the compiled program never changes shape. Per-slot
-    lanes:
+    lifecycle while the compiled program never changes shape, and it
+    ``lax.scan``s ``steps_per_dispatch`` (k) masked steps inside ONE
+    executable so per-dispatch host overhead is amortized k-fold. The
+    per-slot control lanes are ``[k, batch]`` *schedules* the host
+    precomputes for the whole micro-run (finish steps are known at
+    admission, so the schedule needs no device readback):
 
-    * ``fresh[b]``  — slot ``b`` was just (re)admitted: its KV/SSM state
-      lanes are zeroed in-step (buffers donated, so the reset is in
-      place) before anything reads them, so a reused slot can never see
-      its predecessor's cache;
-    * ``start[b]``  — the global position the slot's request began at;
-      attention is windowed to ``[start[b], pos]``. RoPE scores depend
-      only on relative position, so a request admitted mid-dispatch
-      decodes exactly as it would from position 0;
-    * ``feed[b]``   — teacher-forcing lane for eager prefill: ``>= 0``
-      feeds this prompt token (the slot is still prefilling while its
-      neighbours decode), ``-1`` continues from the slot's previous
-      argmax ``prev[b]``;
-    * ``active[b]`` — idle slots emit token 0 and their writes land
-      outside every other slot's window, so they are harmless.
+    * ``fresh[i, b]``  — slot ``b`` is (re)admitted at scan step ``i``:
+      its KV/SSM state lanes are zeroed (buffers donated, so the reset
+      is in place) before anything reads them, so a reused slot can
+      never see its predecessor's cache. Admission lands on micro-run
+      boundaries, so ONLY ROW 0 may be set (the compiled program applies
+      exactly row 0, once, before the scan — one full-state masked pass
+      per micro-run instead of k; the schedule keeps the ``[k, B]``
+      shape so mid-scan admission can land later without an API break,
+      at which point the wipe moves into the scan body);
+    * ``start[i, b]``  — the global position the slot's request began
+      at; attention is windowed to ``[start[i, b], pos + i]``. RoPE
+      scores depend only on relative position, so a request admitted
+      mid-dispatch decodes exactly as it would from position 0;
+    * ``feed[i, b]``   — teacher-forcing lane for chunked prefill:
+      ``>= 0`` feeds this prompt token (a long prompt enters as
+      successive k-token chunks across micro-runs while its neighbours
+      decode), ``-1`` continues from the slot's previous argmax;
+    * ``active[i, b]`` — a slot whose request finishes mid-scan
+      self-masks for the remaining steps: it emits token 0 (never read —
+      a refilled slot always teacher-forces its first prompt token) and
+      its writes land outside every other slot's window, so they are
+      harmless.
 
-    Inputs:  (params, state, feed [B] i32, prev [B] i32, pos [] i32,
-              start [B] i32, active [B] bool, fresh [B] bool)
-    Outputs: (tok [B] i32 — the greedy argmax for active slots, 0
-              elsewhere — and the updated state)
+    Inputs:  (params, state, feed [k,B] i32, prev [B] i32, pos [] i32,
+              start [k,B] i32, active [k,B] bool, fresh [k,B] bool) —
+             ``pos`` is the micro-run's base position; scan step ``i``
+             runs global position ``pos + i``.
+    Outputs: (toks [k,B] i32 — greedy argmax for active lane-steps, 0
+              elsewhere — last [B] i32 (the final scan step's tokens,
+              the next micro-run's ``prev``), and the updated state)
     """
+    if steps_per_dispatch < 1:
+        raise ValueError(
+            f"steps_per_dispatch must be >= 1, got {steps_per_dispatch}")
+    k = steps_per_dispatch
     rules = _resolve_rules(cfg, mode, rules)
     model = build_model(cfg)
     pspecs = model.param_specs()
@@ -308,31 +329,49 @@ def make_masked_decode_step(cfg: ArchConfig, batch: int, max_len: int,
 
     batch_axes = state_batch_axes(sspecs)
 
-    def masked_step(params, state, feed, prev, pos, start, active, fresh):
-        state = wipe_state_slots(state, fresh, batch_axes)
-        tok_in = jnp.where(feed >= 0, feed, prev).astype(jnp.int32)
-        logits, state = model.decode_step(params, state, tok_in, pos,
-                                          window_start=start)
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        return jnp.where(active, tok, 0), state
+    def masked_run(params, state, feed, prev, pos, start, active, fresh):
+        # admission lands on boundaries: only fresh[0] may be set, so
+        # the wipe runs ONCE ahead of the scan, not k times inside it
+        state = wipe_state_slots(state, fresh[0], batch_axes)
+
+        def body(carry, xs):
+            st, pv = carry
+            i, feed_i, start_i, active_i = xs
+            tok_in = jnp.where(feed_i >= 0, feed_i, pv).astype(jnp.int32)
+            logits, st = model.decode_step(params, st, tok_in, pos + i,
+                                           window_start=start_i)
+            tok = jnp.where(active_i,
+                            jnp.argmax(logits, -1).astype(jnp.int32), 0)
+            # pv is only ever read on live decode steps (feed == -1), and
+            # a slot live at the next micro-run is necessarily active at
+            # step k-1, so the masked tok is always a valid next-prev
+            return (st, tok), tok
+
+        xs = (jnp.arange(k, dtype=jnp.int32), feed, start, active)
+        (state, _), toks = jax.lax.scan(body, (state, prev), xs)
+        return toks, toks[-1], state
 
     param_sh = specs_to_shardings(pspecs, mesh, rules)
     state_sh = specs_to_shardings(sspecs, mesh, rules)
     lane_sh = NamedSharding(
         mesh, fit_pspec((batch,),
                         logical_to_pspec(("batch",), mesh, rules), mesh))
+    sched_sh = NamedSharding(
+        mesh, fit_pspec((k, batch),
+                        logical_to_pspec((None, "batch"), mesh, rules), mesh))
     pos_sh = NamedSharding(mesh, P())
     lane_i32 = jax.ShapeDtypeStruct((batch,), jnp.int32)
-    lane_bool = jax.ShapeDtypeStruct((batch,), jnp.bool_)
+    sched_i32 = jax.ShapeDtypeStruct((k, batch), jnp.int32)
+    sched_bool = jax.ShapeDtypeStruct((k, batch), jnp.bool_)
     return LoweringBundle(
-        fn=masked_step,
-        in_shardings=(param_sh, state_sh, lane_sh, lane_sh, pos_sh,
-                      lane_sh, lane_sh, lane_sh),
-        out_shardings=(lane_sh, state_sh),
+        fn=masked_run,
+        in_shardings=(param_sh, state_sh, sched_sh, lane_sh, pos_sh,
+                      sched_sh, sched_sh, sched_sh),
+        out_shardings=(sched_sh, lane_sh, state_sh),
         abstract_inputs=(
             abstract_params(pspecs), abstract_params(sspecs),
-            lane_i32, lane_i32, jax.ShapeDtypeStruct((), jnp.int32),
-            lane_i32, lane_bool, lane_bool,
+            sched_i32, lane_i32, jax.ShapeDtypeStruct((), jnp.int32),
+            sched_i32, sched_bool, sched_bool,
         ),
         mesh=mesh,
         rules=rules,

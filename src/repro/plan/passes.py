@@ -331,7 +331,9 @@ def compile_pass(ir: PlanIR) -> PlanIR:
                           "note": "prefill->decode scan handoff"}
         cat["masked_decode"] = {
             "batch": "per-bucket", "seq_len": "per-bucket",
-            "note": "slot-masked continuous-batching step",
+            "steps_per_dispatch": "per-scheduler",
+            "note": "slot-masked continuous-batching micro-run (scans k "
+                    "masked steps per call; cache-keyed by k)",
         }
     ir.executables = cat
     ir.record("Compile", kinds=sorted(cat), cache="serve.ExecutableCache",

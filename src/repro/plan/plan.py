@@ -176,13 +176,14 @@ class ExecutionPlan:
     # -- executables ----------------------------------------------------------
 
     def _key(self, kind: str, batch: int, max_len: int,
-             prefill_len: int = 0) -> CacheKey:
+             prefill_len: int = 0, steps: int = 1) -> CacheKey:
         return CacheKey(
             arch=self.cfg.name, kind=kind, batch=batch, max_len=max_len,
             prefill_len=prefill_len, mode=self.mode,
             mesh_axes=CacheKey.mesh_signature(self.mesh),
             quantized=self.cfg.quantized,
             stages=self.ir.pipeline_stages, qsig=self._qsig(),
+            steps=steps,
         )
 
     def executable(self, kind: Optional[str] = None) -> CachedExecutable:
@@ -209,13 +210,22 @@ class ExecutionPlan:
         return self.cache.get_or_build(key, builders[kind])
 
     def serve_executable(self, kind: str, *, batch: int, max_len: int,
-                         prefill_len: int = 0) -> CachedExecutable:
+                         prefill_len: int = 0,
+                         steps_per_dispatch: int = 1) -> CachedExecutable:
         """A bucketed serving executable: ``kind`` is "decode" (single
         token against resident state), "prefill" (the prefill->decode
         scan handoff padded to ``prefill_len``), or "masked_decode" (the
-        slot-masked continuous-batching step — per-slot active/fresh
-        lanes and attention windows, one shape-stable executable per
-        bucket)."""
+        slot-masked continuous-batching micro-run — per-slot
+        active/fresh lane schedules and attention windows, scanning
+        ``steps_per_dispatch`` masked steps per call; one shape-stable
+        executable per (bucket, k), keyed separately in the cache)."""
+        if steps_per_dispatch < 1:
+            raise ValueError(
+                f"steps_per_dispatch must be >= 1, got {steps_per_dispatch}")
+        if steps_per_dispatch > 1 and kind != "masked_decode":
+            raise ValueError(
+                "steps_per_dispatch only applies to masked_decode "
+                f"executables, not {kind!r}")
         if kind == "decode":
             shape = ShapeSpec(f"b{batch}xl{max_len}", max_len, batch,
                               "decode")
@@ -227,10 +237,12 @@ class ExecutionPlan:
                 rules=self.rules)
         elif kind == "masked_decode":
             build = lambda: make_masked_decode_step(  # noqa: E731
-                self.cfg, batch, max_len, self.mesh, rules=self.rules)
+                self.cfg, batch, max_len, self.mesh, rules=self.rules,
+                steps_per_dispatch=steps_per_dispatch)
         else:
             raise ValueError(f"unknown serve executable kind {kind!r}")
-        key = self._key(kind, batch, max_len, prefill_len)
+        key = self._key(kind, batch, max_len, prefill_len,
+                        steps=steps_per_dispatch)
         self._built_any = True
         return self.cache.get_or_build(key, build)
 

@@ -8,7 +8,9 @@ Public surface:
   continuous slot-reuse scheduler (``schedule="continuous"``).
 * :class:`~repro.serve.scheduler.ContinuousScheduler` — iteration-level
   scheduling: freed slots are refilled inside an in-flight dispatch via
-  the slot-masked decode executable.
+  the slot-masked decode executable, which scans ``steps_per_dispatch``
+  masked steps per call (micro-runs: chunked prefill for long prompts,
+  mid-scan self-masking, boundary-level cancellation).
 * :class:`~repro.serve.cache.ExecutableCache` — process-wide
   ``lower().compile()`` cache with hit/miss/lowering/compile counters.
 * :class:`~repro.serve.state_pool.StatePool` — per-bucket resident

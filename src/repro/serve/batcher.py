@@ -22,9 +22,12 @@ lowerings and zero compiles; the cache counters prove it.
 This fixed-group FIFO path is the ``schedule="fifo"`` default;
 ``schedule="continuous"`` routes ``run()`` through the
 :class:`~repro.serve.scheduler.ContinuousScheduler`, which reuses slots
-INSIDE an in-flight dispatch (masked per-slot lanes over one
-``make_masked_decode_step`` executable per bucket) instead of idling them
-until the group's longest request finishes. See docs/serving.md.
+INSIDE an in-flight dispatch (masked per-slot lane schedules over one
+``make_masked_decode_step`` executable per (bucket, ``steps_per_dispatch``))
+instead of idling them until the group's longest request finishes.
+``steps_per_dispatch`` (k) scans k masked steps per executable call —
+micro-runs that amortize dispatch overhead and chunk long prompts k
+tokens at a time. See docs/serving.md.
 """
 
 from __future__ import annotations
@@ -198,7 +201,8 @@ class ServeBatcher:
                  quantized: bool = False,
                  policy: Optional[BucketPolicy] = None,
                  cache: Optional[ExecutableCache] = None,
-                 schedule: str = "fifo"):
+                 schedule: str = "fifo",
+                 steps_per_dispatch: int = 1):
         from repro.plan import ExecutionPlan, build_plan
 
         if isinstance(plan_or_cfg, ExecutionPlan):
@@ -217,7 +221,15 @@ class ServeBatcher:
         if schedule not in ("fifo", "continuous"):
             raise ValueError(
                 f"schedule must be 'fifo' or 'continuous', got {schedule!r}")
+        if steps_per_dispatch < 1:
+            raise ValueError(
+                f"steps_per_dispatch must be >= 1, got {steps_per_dispatch}")
+        if steps_per_dispatch > 1 and schedule != "continuous":
+            raise ValueError(
+                "steps_per_dispatch > 1 needs schedule='continuous' — the "
+                "fifo path amortizes prompts through its prefill scan")
         self.schedule = schedule
+        self.steps_per_dispatch = steps_per_dispatch
         self.policy = policy or BucketPolicy.debug()
         self.pool = StatePool(self.plan)
         self.params = None
@@ -229,8 +241,9 @@ class ServeBatcher:
         if schedule == "continuous":
             from repro.serve.scheduler import ContinuousScheduler
 
-            self._scheduler = ContinuousScheduler(self.plan, self.policy,
-                                                  self.pool)
+            self._scheduler = ContinuousScheduler(
+                self.plan, self.policy, self.pool,
+                steps_per_dispatch=steps_per_dispatch)
 
     @property
     def scheduler(self):
@@ -283,6 +296,38 @@ class ServeBatcher:
         self._pending_ids.add(request.request_id)
         self._pending.append(request)
         return request.request_id
+
+    def cancel(self, request_id: str) -> bool:
+        """Cancel a queued or in-flight request; returns True if known.
+
+        A queued request is removed from the admission queue immediately
+        (it never reaches a slot). An in-flight request — only possible
+        under ``schedule="continuous"`` — is marked for the scheduler,
+        which frees its slot (and wipes its state lanes) at the next
+        micro-run boundary; it never appears in the results. The id
+        becomes reusable the moment this returns True. Under
+        ``schedule="fifo"`` a request already inside a dispatch group
+        cannot be canceled (the group runs to completion) and this
+        returns False.
+
+        Call this from the dispatching thread only — between ``run()``
+        calls, or mid-run from the scheduler's ``on_boundary`` hook (the
+        queue is not locked against a concurrently draining ``run()``;
+        an async front-end that feeds cancels from other threads is the
+        ROADMAP follow-on).
+        """
+        if request_id not in self._pending_ids:
+            return False
+        for i, req in enumerate(self._pending):
+            if req.request_id == request_id:
+                del self._pending[i]
+                self._pending_ids.discard(request_id)
+                return True
+        if self._scheduler is not None:
+            self._scheduler.cancel(request_id)
+            self._pending_ids.discard(request_id)
+            return True
+        return False
 
     def warmup(self, bucket: Bucket, prompt_len: int = 1) -> None:
         """Compile a bucket's executables ahead of traffic."""
@@ -341,7 +386,9 @@ class ServeBatcher:
                     prefill_len: int) -> CachedExecutable:
         return self.plan.serve_executable(
             kind, batch=bucket.batch, max_len=bucket.max_len,
-            prefill_len=prefill_len)
+            prefill_len=prefill_len,
+            steps_per_dispatch=self.steps_per_dispatch
+            if kind == "masked_decode" else 1)
 
     def _argmax(self, bucket: Bucket, tok_sharding):
         fn = self._argmax_fns.get(bucket.label)

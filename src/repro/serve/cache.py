@@ -9,7 +9,7 @@ lowered+compiled XLA executable produced by a ``LoweringBundle`` from
 by everything that changes the program:
 
     (arch, kind, batch, max_len, prefill_len, mode, mesh axes, quantized,
-     stages, qsig)
+     stages, qsig, steps)
 
 ``ExecutableCache.get_or_build`` is the only entry point — the plan's
 Compile pass routes every executable in the system (train, prefill,
@@ -40,7 +40,10 @@ class CacheKey:
     pins both the axis names and sizes (a 2x4 and a 4x2 mesh compile
     differently). ``stages`` and ``qsig`` separate plan variants: a
     stage-sharded layers axis or recalibrated quantization shifts change
-    the program even when everything else matches.
+    the program even when everything else matches. ``steps`` is the
+    masked-decode micro-run length (``steps_per_dispatch``): a k-step
+    scanned executable is a different program than the single-step one,
+    so distinct k values must never collide (1 for every other kind).
     """
 
     arch: str
@@ -53,6 +56,7 @@ class CacheKey:
     quantized: bool = False
     stages: int = 1
     qsig: Tuple[Tuple[Any, ...], ...] = ()
+    steps: int = 1
 
     @staticmethod
     def mesh_signature(mesh: Mesh) -> Tuple[Tuple[str, int], ...]:

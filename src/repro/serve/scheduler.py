@@ -6,20 +6,30 @@ the remainder of the group — the utilization gap the paper's
 sustained-throughput argument is about (peak single-dispatch numbers say
 nothing about the fabric staying busy). :class:`ContinuousScheduler`
 closes it with iteration-level scheduling over ONE shape-stable
-executable per bucket (``make_masked_decode_step``):
+executable per (bucket, k) (``make_masked_decode_step``):
 
 * every batch lane ("slot") carries its own request lifecycle — teacher-
-  forced eager prefill, greedy decode, finished — controlled by per-slot
-  lanes (``feed``/``start``/``active``/``fresh``) that are plain inputs,
-  so the compiled program never changes shape and a churning request mix
-  performs ZERO lowerings after warmup;
-* the moment a request finishes, its slot is freed and the next queued
-  request is admitted at the CURRENT global position: the ``fresh`` lane
-  zeroes the slot's KV/SSM state in-step (donated buffers — the
-  StatePool per-slot reset contract), and the attention window
-  ``[start, pos]`` guarantees the newcomer never sees its predecessor's
-  cache. RoPE attention depends only on relative position, so a request
-  admitted at position 37 decodes exactly as it would from 0;
+  forced chunked prefill, greedy decode, finished — controlled by
+  per-slot lane *schedules* (``feed``/``start``/``active``/``fresh``,
+  shape ``[k, slots]``) that are plain inputs, so the compiled program
+  never changes shape and a churning request mix performs ZERO lowerings
+  after warmup;
+* the event horizon is a **micro-run** of ``steps_per_dispatch`` (k)
+  masked steps scanned inside one executable call: admission, refill,
+  cancellation, and completion all land on micro-run boundaries, and the
+  host precomputes the whole ``[k, slots]`` schedule ahead of each call
+  (finish steps are known at admission, so mid-scan self-masking needs
+  no device readback). k amortizes per-dispatch overhead k-fold and
+  admits a long prompt as successive k-token feed-lane chunks — a
+  512-token prompt costs ~512/k dispatches, not 512;
+* the moment a request's micro-run completes, its slot is freed and the
+  next queued request is admitted at the NEXT boundary (refill gap <= k
+  steps, == 1 for k=1): the ``fresh`` lane zeroes the slot's KV/SSM
+  state in-step (donated buffers — the StatePool per-slot reset
+  contract), and the attention window ``[start, pos]`` guarantees the
+  newcomer never sees its predecessor's cache. RoPE attention depends
+  only on relative position, so a request admitted at position 37
+  decodes exactly as it would from 0;
 * admission is capacity-checked: a request needing ``n`` positions joins
   an in-flight dispatch only while ``pos + n <= bucket.max_len``; when
   the bucket's positions run out the dispatch drains and a new one
@@ -29,6 +39,13 @@ Scheduling is deterministic: a request's finish step is known at
 admission (``start + len(prompt) + max_new_tokens - 2``), so the host
 never reads back tokens mid-dispatch — per-step outputs stay on device
 and are fetched once when the dispatch drains.
+
+:meth:`ContinuousScheduler.cancel` marks an in-flight request for
+removal; its slot is freed (and its state lanes wiped through
+``StatePool.reset_slots``) at the next micro-run boundary, and it never
+appears in the results. ``on_boundary`` is an optional host hook invoked
+at every boundary — the seam where cancellation, priority, or deadline
+policies plug in without touching the compiled step.
 """
 
 from __future__ import annotations
@@ -36,7 +53,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
-from typing import Deque, Dict, List, Optional
+from typing import Callable, Deque, Dict, List, Optional, Set
 
 import jax
 import numpy as np
@@ -55,9 +72,9 @@ _EVENT_WINDOW = 4096      # bounded: a resident server must not grow per-req
 
 @dataclasses.dataclass(frozen=True)
 class SlotEvent:
-    """One admission or free, for tests and post-hoc traces."""
+    """One admission, free, or cancellation, for tests and traces."""
 
-    kind: str             # "admit" | "free"
+    kind: str             # "admit" | "free" | "cancel"
     step: int             # global position at which it happened
     slot: int
     request_id: str
@@ -82,21 +99,36 @@ class ContinuousScheduler:
 
     A thin state machine over the plan's ``masked_decode`` executable:
     the plan owns compilation, the :class:`StatePool` owns the resident
-    KV/SSM buffers, and the scheduler only decides, per step, which slot
-    runs which request. ``ServeBatcher(schedule="continuous")`` drives it;
-    the fixed-group path stays available as the ``schedule="fifo"``
-    fallback.
+    KV/SSM buffers, and the scheduler only decides, per micro-run, which
+    slot runs which request. ``ServeBatcher(schedule="continuous")``
+    drives it; the fixed-group path stays available as the
+    ``schedule="fifo"`` fallback. ``steps_per_dispatch`` (k) is the
+    micro-run length: every bucket's ``max_len`` must be a multiple of k
+    so micro-runs tile the position space exactly.
     """
 
-    def __init__(self, plan, policy: BucketPolicy, pool: StatePool):
+    def __init__(self, plan, policy: BucketPolicy, pool: StatePool,
+                 steps_per_dispatch: int = 1):
+        if steps_per_dispatch < 1:
+            raise ValueError(
+                f"steps_per_dispatch must be >= 1, got {steps_per_dispatch}")
+        for b in policy.buckets:
+            if b.max_len % steps_per_dispatch:
+                raise ValueError(
+                    f"bucket {b.label}: max_len must be a multiple of "
+                    f"steps_per_dispatch={steps_per_dispatch} so micro-runs "
+                    "tile the position space")
         self.plan = plan
         self.policy = policy
         self.pool = pool
+        self.steps_per_dispatch = steps_per_dispatch
         # counters (tests + benchmark): slot_steps counts every lane-step
         # of every dispatch; idle_slot_steps the lanes that ran inert
         self.dispatches = 0
+        self.micro_runs = 0
         self.steps = 0
         self.admissions = 0
+        self.cancellations = 0
         self.slot_steps = 0
         self.idle_slot_steps = 0
         self.refills = 0
@@ -106,6 +138,35 @@ class ContinuousScheduler:
             maxlen=_EVENT_WINDOW)
         # per-dispatch [B] idle-step vectors (benchmark slot-idle p50/p99)
         self.dispatch_idle: Deque[List[int]] = collections.deque(maxlen=256)
+        # requests to drop at the next micro-run boundary (see cancel());
+        # marks never survive a boundary, so a later request reusing a
+        # canceled id can never be swallowed by a stale mark
+        self._canceled: Set[str] = set()
+        # cancels that arrived after their request already completed in
+        # an EARLIER dispatch of the current run(); run() drops their
+        # results before merging anything newer
+        self._stale_cancels: Set[str] = set()
+        # host hook run at every boundary BEFORE frees/admission — the
+        # plug-in point for cancellation and admission-policy experiments
+        self.on_boundary: Optional[Callable[[int, List[Optional[_Slot]]],
+                                            None]] = None
+
+    # -- cancellation ---------------------------------------------------------
+
+    def cancel(self, request_id: str) -> None:
+        """Drop an in-flight request at the next micro-run boundary.
+
+        The current micro-run finishes undisturbed (its schedule is
+        already on device); at the boundary the slot is freed for the
+        next queued request, its state lanes are wiped through the
+        pool's donated per-slot reset, and the request never appears in
+        the results. A cancel that races its request's completion still
+        drops the tokens. Call from the dispatching thread (e.g. the
+        ``on_boundary`` hook). Queued-but-unadmitted requests are the
+        batcher's job (``ServeBatcher.cancel`` removes them from the
+        queue before they reach the scheduler).
+        """
+        self._canceled.add(request_id)
 
     # -- admission ------------------------------------------------------------
 
@@ -154,18 +215,46 @@ class ContinuousScheduler:
         """Drain the queue through successive continuous dispatches."""
         results: Dict[str, RequestResult] = {}
         while pending:
-            results.update(self._dispatch(pending, params, metrics))
+            res = self._dispatch(pending, params, metrics)
+            # cancels that raced a completion from an EARLIER dispatch:
+            # drop the old tokens BEFORE merging this dispatch's results,
+            # so a request legitimately resubmitted under the same id
+            # after the cancel keeps its fresh tokens
+            for rid in self._stale_cancels:
+                if results.pop(rid, None) is not None:
+                    self.cancellations += 1
+            self._stale_cancels.clear()
+            results.update(res)
         return results
+
+    def _free(self, slots, b, pos, freed_at, done=None):
+        """Release lane ``b`` at boundary ``pos`` (finish or cancel)."""
+        slot = slots[b]
+        if done is not None:
+            done.append((slot.req, b, slot.start))
+            # the free happened when the request produced its last token
+            self.events.append(
+                SlotEvent("free", slot.end_step, b, slot.req.request_id))
+            freed_at[b] = slot.end_step
+        else:
+            self.events.append(
+                SlotEvent("cancel", pos, b, slot.req.request_id))
+            # the lane was occupied through the previous micro-run's end
+            freed_at[b] = pos - 1
+        slots[b] = None
 
     def _dispatch(self, pending: Deque[DecodeRequest], params,
                   metrics: Dict[str, BucketMetrics]
                   ) -> Dict[str, RequestResult]:
         t0 = time.perf_counter()
+        k = self.steps_per_dispatch
         bucket = self.policy.bucket_for(pending[0].need_len)
         B, L = bucket.batch, bucket.max_len
-        exe = self.plan.serve_executable("masked_decode", batch=B, max_len=L)
-        lane_sh = exe.bundle.in_shardings[2]
+        exe = self.plan.serve_executable("masked_decode", batch=B, max_len=L,
+                                         steps_per_dispatch=k)
+        sched_sh = exe.bundle.in_shardings[2]
         pos_sh = exe.bundle.in_shardings[4]
+        prev_sh = exe.bundle.in_shardings[3]
 
         state = self.pool.acquire(B, L)
         slots: List[Optional[_Slot]] = [None] * B
@@ -173,65 +262,112 @@ class ContinuousScheduler:
         idle_steps = [0] * B
         ever_used = [False] * B
         done: List[tuple] = []        # (req, slot idx, start)
-        outs = []                     # per-step device token vectors [B]
-        prev = jax.device_put(np.zeros((B,), np.int32), lane_sh)
+        outs = []                     # per-micro-run device token blocks [k,B]
+        prev = jax.device_put(np.zeros((B,), np.int32), prev_sh)
         pos = 0
 
-        # lane inputs only change on admission/free events; between events
-        # (the common steady state) reuse the resident device buffers
+        # lane schedules only change on admission/free/prefill events;
+        # in the steady decode state reuse the resident device buffers
         lane_cache: Dict[str, tuple] = {}
 
         def lane(name, host):
             cached = lane_cache.get(name)
             if cached is not None and np.array_equal(cached[0], host):
                 return cached[1]
-            dev = jax.device_put(host, lane_sh)
+            dev = jax.device_put(host, sched_sh)
             lane_cache[name] = (host, dev)
             return dev
 
-        while pos < L:
-            fresh = np.zeros((B,), bool)
+        def drain_cancels():
+            """Resolve every pending cancel mark against this dispatch's
+            finished-but-unreturned requests; anything left completed in
+            an earlier dispatch (or was bogus) and is handed to run().
+            Marks never survive a boundary, so a future request reusing
+            a canceled id cannot be swallowed."""
+            for rid in list(self._canceled):
+                self._canceled.discard(rid)
+                idx = next((i for i, (req, _, _) in enumerate(done)
+                            if req.request_id == rid), None)
+                if idx is not None:
+                    del done[idx]             # finished: drop the tokens
+                    self.cancellations += 1
+                else:
+                    self._stale_cancels.add(rid)
+
+        while pos + k <= L:
+            # ---- micro-run boundary: hook, cancels, frees, admission ----
+            if self.on_boundary is not None:
+                self.on_boundary(pos, slots)
+            cancel_mask = np.zeros((B,), bool)
+            for b, slot in enumerate(slots):
+                if slot is None:
+                    continue
+                if slot.req.request_id in self._canceled:
+                    self._canceled.discard(slot.req.request_id)
+                    self.cancellations += 1
+                    cancel_mask[b] = True
+                    self._free(slots, b, pos, freed_at)
+                elif slot.end_step < pos:
+                    self._free(slots, b, pos, freed_at, done)
+            if cancel_mask.any():
+                # wipe the canceled lanes NOW: even if no successor is
+                # admitted this dispatch, the state pytree must not carry
+                # a dead request's KV/SSM past the boundary
+                state = self.pool.reset_slots(B, L, state, cancel_mask)
+            drain_cancels()
+
+            fresh = np.zeros((k, B), bool)
             for b in self._admit(pending, bucket, slots, pos, freed_at):
-                fresh[b] = True
+                fresh[0, b] = True
                 ever_used[b] = True
             if all(s is None for s in slots):
                 break                  # drained, or out of positions
 
-            feed = np.zeros((B,), np.int32)
-            start = np.full((B,), pos, np.int32)
-            active = np.zeros((B,), bool)
+            # ---- precompute the [k, B] schedule for this micro-run ----
+            feed = np.zeros((k, B), np.int32)
+            # empty lanes window to their own single position: harmless
+            start = np.broadcast_to(
+                np.arange(pos, pos + k, dtype=np.int32)[:, None],
+                (k, B)).copy()
+            active = np.zeros((k, B), bool)
             for b, slot in enumerate(slots):
                 if slot is None:
-                    idle_steps[b] += 1
-                    self.idle_slot_steps += 1
+                    idle_steps[b] += k
+                    self.idle_slot_steps += k
                     continue
-                active[b] = True
-                start[b] = slot.start
-                if slot.fed < len(slot.req.prompt):
-                    feed[b] = slot.req.prompt[slot.fed]
-                    slot.fed += 1
-                else:
-                    feed[b] = -1       # continue from the slot's argmax
-            tok, state = exe.compiled(
+                # steps this request still runs inside the micro-run;
+                # beyond them the slot self-masks (active False)
+                live = min(k, slot.end_step - pos + 1)
+                active[:live, b] = True
+                start[:, b] = slot.start
+                idle_steps[b] += k - live
+                self.idle_slot_steps += k - live
+                for i in range(live):
+                    if slot.fed < len(slot.req.prompt):
+                        feed[i, b] = slot.req.prompt[slot.fed]
+                        slot.fed += 1
+                    else:
+                        feed[i, b] = -1   # continue from the slot's argmax
+
+            toks, prev, state = exe.compiled(
                 params, state,
                 lane("feed", feed), prev,
                 jax.device_put(np.int32(pos), pos_sh),
                 lane("start", start),
                 lane("active", active),
                 lane("fresh", fresh))
-            prev = tok
-            outs.append(tok)
-            self.steps += 1
-            self.slot_steps += B
+            outs.append(toks)
+            self.micro_runs += 1
+            self.steps += k
+            self.slot_steps += k * B
+            pos += k
 
-            for b, slot in enumerate(slots):
-                if slot is not None and pos == slot.end_step:
-                    done.append((slot.req, b, slot.start))
-                    slots[b] = None
-                    freed_at[b] = pos
-                    self.events.append(
-                        SlotEvent("free", pos, b, slot.req.request_id))
-            pos += 1
+        # every admitted request ends inside the loop (admission bounds
+        # end_step < L and micro-runs tile [0, L)), so drain the rest
+        for b, slot in enumerate(slots):
+            if slot is not None:
+                self._free(slots, b, pos, freed_at, done)
+        drain_cancels()   # marks set during the final micro-run
 
         if outs:
             jax.block_until_ready(outs[-1])
@@ -240,8 +376,9 @@ class ContinuousScheduler:
         self.dispatches += 1
         self.dispatch_idle.append(idle_steps)
 
-        toks = (np.stack([np.asarray(jax.device_get(t)) for t in outs])
-                if outs else np.zeros((0, B), np.int32))   # [steps, B]
+        toks = (np.concatenate(
+            [np.asarray(jax.device_get(t)) for t in outs], axis=0)
+            if outs else np.zeros((0, B), np.int32))   # [steps, B]
         results: Dict[str, RequestResult] = {}
         for req, b, s in done:
             first = s + len(req.prompt) - 1
@@ -263,7 +400,7 @@ class ContinuousScheduler:
         m.new_tokens += sum(len(r.tokens) for r in results.values())
         m.decode_seconds += t_total
         m.latencies.extend([t_total] * len(results))
-        span = len(outs)
+        span = len(outs) * k
         m.slot_steps += span * B
         for b in range(B):
             m.busy_slot_steps += span - idle_steps[b]
@@ -276,8 +413,11 @@ class ContinuousScheduler:
         busy = self.slot_steps - self.idle_slot_steps
         return {
             "dispatches": self.dispatches,
+            "micro_runs": self.micro_runs,
+            "steps_per_dispatch": self.steps_per_dispatch,
             "steps": self.steps,
             "admissions": self.admissions,
+            "cancellations": self.cancellations,
             "slot_steps": self.slot_steps,
             "idle_slot_steps": self.idle_slot_steps,
             "busy_slot_fraction": round(busy / self.slot_steps, 4)

@@ -95,9 +95,12 @@ class StatePool:
     def reset_slots(self, batch: int, max_len: int, state, slot_mask):
         """Zero selected batch lanes of a LIVE state pytree, in place.
 
-        The continuous scheduler's admission-time reset: when a finished
-        request frees slot ``b`` mid-dispatch, the next request must not
-        inherit its KV/SSM lanes. ``slot_mask`` is a [batch] bool vector;
+        The continuous scheduler's host-side reset: when a request is
+        CANCELED at a micro-run boundary its lanes are wiped through this
+        immediately (the state must not carry a dead request's KV/SSM
+        past the boundary, successor or not); ordinary finish-then-refill
+        relies on the in-step ``fresh`` lane instead. ``slot_mask`` is a
+        [batch] bool vector;
         the per-bucket jitted reset donates the state, so the wipe reuses
         the resident buffers (no reallocation, no executable-shape
         change). Each state leaf's batch axis comes from the plan's

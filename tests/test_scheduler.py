@@ -1,32 +1,53 @@
-"""Continuous-batching scheduler: slot reuse inside in-flight dispatches.
+"""Continuous-batching scheduler: slot reuse, micro-runs, cancellation.
 
-The three acceptance properties this file pins down:
+The acceptance properties this file pins down:
 
 * **slot reuse is immediate** — under a staggered-finish trace with a
-  deep queue, every freed slot is refilled on the very next dispatch
-  step (refill gap == 1), and the newcomer's state lanes are reset so
-  its tokens are exactly what a fresh decode would produce;
-* **argmax parity with the FIFO path** — the same request set produces
-  token-for-token identical greedy output under ``schedule="fifo"`` and
-  ``schedule="continuous"``, float and ``--quantized`` alike (slot
-  windows + RoPE's relative-position property make a request admitted at
-  position 37 decode exactly as it would from 0);
+  deep queue, every freed slot is refilled at the very next micro-run
+  boundary (refill gap == 1 for k=1, <= k in general), and the
+  newcomer's state lanes are reset so its tokens are exactly what a
+  fresh decode would produce;
+* **argmax parity with the FIFO path across k** — the same request set
+  produces token-for-token identical greedy output under
+  ``schedule="fifo"`` and ``schedule="continuous"`` for
+  ``steps_per_dispatch`` in {1, 2, 4}, float, ``--quantized``, and
+  hybrid-SSM alike (slot windows + RoPE's relative-position property
+  make a request admitted at position 37 decode exactly as it would
+  from 0, whether the steps run one per dispatch or scanned k at a
+  time);
+* **chunked prefill == eager prefill** — a long prompt admitted as
+  successive k-token feed-lane chunks across micro-runs produces the
+  same tokens as the one-token-per-step eager path, in ~1/k the
+  dispatches;
 * **zero new lowerings after warmup under churn** — a continuously
-  churning request mix (new admissions mid-dispatch, multiple
-  dispatches, fresh length mixes) drives exactly ONE masked-decode
-  executable per bucket; after the first dispatch only the cache's hit
-  counter moves.
+  churning request mix drives exactly ONE masked-decode executable per
+  (bucket, k); after the first dispatch only the cache's hit counter
+  moves;
+* **cancellation** — ``ServeBatcher.cancel`` frees an in-flight slot at
+  the next micro-run boundary, wipes its state lanes, and the slot's
+  next tenant decodes exactly as if the canceled request never ran;
+* **scheduler invariants** (property-tested on a host-level executable
+  stand-in, hypothesis + seeded streams): slot non-overlap, FIFO
+  admission order within a bucket, refill gap <= k, and conservation —
+  every submitted id completes exactly once (canceled ids: zero times).
 """
+
+import collections
+import types
 
 import jax
 import numpy as np
 import pytest
+from conftest import hypothesis_or_skip_stub
 
 from repro.configs import reduced_config
 from repro.dist.sharding import init_params
 from repro.launch.mesh import make_debug_mesh
 from repro.models import build_model
 from repro.serve import Bucket, BucketPolicy, DecodeRequest, ServeBatcher
+from repro.serve.scheduler import ContinuousScheduler
+
+given, settings, st = hypothesis_or_skip_stub()
 
 
 @pytest.fixture(scope="module")
@@ -53,13 +74,13 @@ def _staggered(tag, lengths, prompt_len=2):
 
 
 # ---------------------------------------------------------------------------
-# slot reuse: freed slots refill on the next step
+# slot reuse: freed slots refill at the next micro-run boundary
 # ---------------------------------------------------------------------------
 
 
 def test_freed_slots_refill_within_one_step(cfg, mesh, params):
     """Staggered finish lengths with a deep queue: the scheduler must
-    admit a waiting request into every freed slot on the very next
+    admit a waiting request into every freed slot at the very next
     dispatch step — the utilization contract continuous batching makes."""
     with mesh:
         b = ServeBatcher(cfg, mesh, schedule="continuous",
@@ -83,6 +104,22 @@ def test_freed_slots_refill_within_one_step(cfg, mesh, params):
     assert len(refilled) == 4
 
 
+def test_refill_gap_bounded_by_k_on_model(cfg, mesh, params):
+    """With k=4 micro-runs, a freed slot waits at most until the next
+    boundary: every refill gap is in [1, k]."""
+    with mesh:
+        b = ServeBatcher(cfg, mesh, schedule="continuous",
+                         policy=BucketPolicy([Bucket(64, 2)]),
+                         steps_per_dispatch=4).load_params(params)
+        for r in _staggered("g", [2, 8, 2, 8, 2, 2]):
+            b.submit(r)
+        out = b.run()
+    sched = b.scheduler
+    assert len(out) == 6
+    assert sched.refills > 0
+    assert 1 <= sched.max_refill_gap <= 4
+
+
 def test_capacity_exhaustion_rolls_into_new_dispatch(cfg, mesh, params):
     """When a bucket's positions run out mid-queue, the dispatch drains
     and the remainder is served by a fresh dispatch at position 0 on
@@ -103,7 +140,7 @@ def test_capacity_exhaustion_rolls_into_new_dispatch(cfg, mesh, params):
 
 
 # ---------------------------------------------------------------------------
-# ACCEPTANCE: token-for-token argmax parity with the FIFO path
+# ACCEPTANCE: token-for-token argmax parity with the FIFO path, k in {1,2,4}
 # ---------------------------------------------------------------------------
 
 
@@ -123,65 +160,132 @@ _PARITY_TRACE = [
 ]
 
 
+@pytest.fixture(scope="module")
+def hybrid_setup():
+    """One zamba2 (cfg, params) build shared by the whole k matrix."""
+    hcfg = reduced_config("zamba2_2_7b")
+    return hcfg, init_params(jax.random.PRNGKey(0),
+                             build_model(hcfg).param_specs())
+
+
+@pytest.fixture(scope="module")
+def fifo_reference(cfg, mesh, params, hybrid_setup):
+    """Lazy per-variant fifo token reference shared across the k matrix."""
+    cache = {}
+
+    def get(variant):
+        if variant in cache:
+            return cache[variant]
+        with mesh:
+            if variant == "hybrid":
+                hcfg, hparams = hybrid_setup
+                b = ServeBatcher(hcfg, mesh,
+                                 policy=BucketPolicy([Bucket(64, 2)]),
+                                 ).load_params(hparams)
+            else:
+                b = ServeBatcher(cfg, mesh,
+                                 quantized=(variant == "quantized"),
+                                 ).load_params(params)
+            for rid, p, n in _PARITY_TRACE:
+                b.submit(DecodeRequest(rid, p, max_new_tokens=n))
+            cache[variant] = {k: v.tokens for k, v in b.run().items()}
+        return cache[variant]
+
+    return get
+
+
+@pytest.mark.parametrize("k", [1, 2, 4])
 @pytest.mark.parametrize("quantized", [False, True],
                          ids=["float", "quantized"])
-def test_continuous_matches_fifo_argmax(cfg, mesh, params, quantized):
+def test_continuous_matches_fifo_argmax(cfg, mesh, params, quantized, k,
+                                        fifo_reference):
     """Identical request sets through both schedulers produce identical
-    greedy tokens: reused slots never see a predecessor's KV, and the
-    position offset of a mid-dispatch admission is invisible to RoPE
-    attention. Float and int8-quantized decode alike."""
+    greedy tokens at every micro-run length: reused slots never see a
+    predecessor's KV, and neither the position offset of a mid-dispatch
+    admission nor the k-step scan is visible to RoPE attention. Float
+    and int8-quantized decode alike."""
+    ref = fifo_reference("quantized" if quantized else "float")
     with mesh:
-        bf = ServeBatcher(cfg, mesh, quantized=quantized,
-                          ).load_params(params)
         bc = ServeBatcher(cfg, mesh, quantized=quantized,
-                          schedule="continuous").load_params(params)
+                          schedule="continuous",
+                          steps_per_dispatch=k).load_params(params)
         for rid, p, n in _PARITY_TRACE:
-            bf.submit(DecodeRequest(rid, p, max_new_tokens=n))
             bc.submit(DecodeRequest(rid, p, max_new_tokens=n))
-        rf, rc = bf.run(), bc.run()
+        rc = bc.run()
     assert bc.scheduler.refills > 0         # parity held ACROSS slot reuse
     for rid, _, n in _PARITY_TRACE:
-        assert rf[rid].tokens == rc[rid].tokens, rid
+        assert ref[rid] == rc[rid].tokens, (k, rid)
         assert len(rc[rid].tokens) == n
     if quantized:
         assert bc.cfg.quantized and bc.cfg.quantized_mlp
-        assert all(k.quantized for k in bc.cache._entries)
+        assert all(key.quantized for key in bc.cache._entries)
+    assert all(key.steps == k for key in bc.cache._entries
+               if key.kind == "masked_decode")
 
 
-def test_continuous_matches_fifo_on_hybrid_ssm(mesh):
+@pytest.mark.parametrize("k", [1, 2, 4])
+def test_continuous_matches_fifo_on_hybrid_ssm(mesh, k, fifo_reference,
+                                               hybrid_setup):
     """The hybrid (Mamba2 + shared attention) family exercises the fresh
     lane hardest: a reused slot's SSM/conv state is pure recurrence — no
-    window can hide a stale value, only the in-step per-slot reset."""
-    cfg = reduced_config("zamba2_2_7b")
-    params = init_params(jax.random.PRNGKey(0),
-                         build_model(cfg).param_specs())
-    res = {}
-    for schedule in ("fifo", "continuous"):
-        with mesh:
-            b = ServeBatcher(cfg, mesh, schedule=schedule,
-                             policy=BucketPolicy([Bucket(64, 2)]),
-                             ).load_params(params)
-            for rid, p, n in _PARITY_TRACE:
-                b.submit(DecodeRequest(rid, p, max_new_tokens=n))
-            res[schedule] = {k: v.tokens for k, v in b.run().items()}
+    window can hide a stale value, only the per-slot fresh reset the
+    micro-run applies ahead of its scanned steps."""
+    ref = fifo_reference("hybrid")
+    hcfg, hparams = hybrid_setup
+    with mesh:
+        b = ServeBatcher(hcfg, mesh, schedule="continuous",
+                         policy=BucketPolicy([Bucket(64, 2)]),
+                         steps_per_dispatch=k).load_params(hparams)
+        for rid, p, n in _PARITY_TRACE:
+            b.submit(DecodeRequest(rid, p, max_new_tokens=n))
+        res = {r: v.tokens for r, v in b.run().items()}
     assert b.scheduler.refills > 0
     for rid, _, _ in _PARITY_TRACE:
-        assert res["fifo"][rid] == res["continuous"][rid], rid
+        assert ref[rid] == res[rid], (k, rid)
 
 
 # ---------------------------------------------------------------------------
-# ACCEPTANCE: zero new lowerings after warmup under churn
+# chunked prefill: k-token feed chunks == eager one-token-per-step
 # ---------------------------------------------------------------------------
 
 
-def test_continuous_zero_new_lowerings_under_churn(cfg, mesh, params):
+def test_chunked_prefill_matches_eager_on_long_prompt(cfg, mesh, params):
+    """A prompt ~10 chunks long (3x anything the eager path ingests per
+    boundary event) admitted chunk-by-chunk across micro-runs produces
+    the same tokens as eager k=1 prefill, in ~1/k the dispatches."""
+    long_prompt = [1 + (i * 7) % 61 for i in range(40)]
+    res, micro_runs = {}, {}
+    for k in (1, 4):
+        with mesh:
+            b = ServeBatcher(cfg, mesh, schedule="continuous",
+                             policy=BucketPolicy([Bucket(128, 2)]),
+                             steps_per_dispatch=k).load_params(params)
+            b.submit(DecodeRequest("long", long_prompt, max_new_tokens=4))
+            b.submit(DecodeRequest("rider", [9, 5], max_new_tokens=3))
+            res[k] = {r: v.tokens for r, v in b.run().items()}
+        micro_runs[k] = b.scheduler.micro_runs
+    assert res[1]["long"] == res[4]["long"]
+    assert res[1]["rider"] == res[4]["rider"]
+    assert len(res[4]["long"]) == 4
+    # 43 live steps: 43 micro-runs eagerly, ceil(43/4)=11 chunked
+    assert micro_runs[4] <= (micro_runs[1] + 3) // 4 + 1
+
+
+# ---------------------------------------------------------------------------
+# ACCEPTANCE: zero new lowerings after warmup under churn (k in {1, 4})
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("k", [1, 4])
+def test_continuous_zero_new_lowerings_under_churn(cfg, mesh, params, k):
     """A churning request mix — staggered lengths, mid-dispatch
     admissions, multiple dispatches, a length mix never seen during
-    warmup — runs entirely on the one warm masked-decode executable."""
+    warmup — runs entirely on the one warm masked-decode executable for
+    this (bucket, k)."""
     with mesh:
         b = ServeBatcher(cfg, mesh, schedule="continuous",
                          policy=BucketPolicy([Bucket(64, 2)]),
-                         ).load_params(params)
+                         steps_per_dispatch=k).load_params(params)
         for r in _staggered("warm", [2, 6, 3]):
             b.submit(r)
         b.run()
@@ -203,9 +307,159 @@ def test_continuous_zero_new_lowerings_under_churn(cfg, mesh, params):
     assert b.scheduler.refills > 0
 
 
+def test_micro_runs_amortize_dispatch_count(cfg, mesh, params):
+    """k=4 serves the same trace in ~1/4 the executable calls of k=1."""
+    runs = {}
+    for k in (1, 4):
+        with mesh:
+            b = ServeBatcher(cfg, mesh, schedule="continuous",
+                             policy=BucketPolicy([Bucket(64, 2)]),
+                             steps_per_dispatch=k).load_params(params)
+            for r in _staggered("a", [2, 8, 2, 8, 2, 2]):
+                b.submit(r)
+            b.run()
+        runs[k] = b.scheduler.micro_runs
+        assert b.scheduler.steps == b.scheduler.micro_runs * k
+    assert runs[4] <= (runs[1] + 3) // 4 + 1
+
+
 # ---------------------------------------------------------------------------
-# scheduler bookkeeping
+# cancellation: slot freed at the next boundary, state wiped, id dropped
 # ---------------------------------------------------------------------------
+
+
+def test_cancel_queued_request_never_runs(cfg, mesh, params):
+    with mesh:
+        b = ServeBatcher(cfg, mesh, schedule="continuous",
+                         policy=BucketPolicy([Bucket(64, 2)]),
+                         ).load_params(params)
+        b.submit(DecodeRequest("keep", [5, 9], max_new_tokens=3))
+        b.submit(DecodeRequest("drop", [7, 11], max_new_tokens=3))
+        assert b.cancel("drop") is True
+        assert b.cancel("drop") is False    # unknown once removed
+        out = b.run()
+    assert set(out) == {"keep"}
+    admitted = {e.request_id for e in b.scheduler.events
+                if e.kind == "admit"}
+    assert "drop" not in admitted
+    # the id is free for reuse immediately
+    with mesh:
+        b.submit(DecodeRequest("drop", [7, 11], max_new_tokens=3))
+        out = b.run()
+    assert len(out["drop"].tokens) == 3
+
+
+def test_cancel_inflight_slot_reused_and_state_wiped(cfg, mesh, params):
+    """A mid-flight cancel (issued from the boundary hook) frees the slot
+    at the next micro-run boundary; the next tenant of that exact slot
+    decodes token-for-token what it decodes in a run where the canceled
+    request never existed — i.e. the canceled KV/SSM lanes were wiped."""
+    with mesh:
+        ref_b = ServeBatcher(cfg, mesh, schedule="continuous",
+                             policy=BucketPolicy([Bucket(64, 2)]),
+                             steps_per_dispatch=2).load_params(params)
+        ref_b.submit(DecodeRequest("late", [7, 11, 13], max_new_tokens=4))
+        ref = ref_b.run()["late"].tokens
+
+        b = ServeBatcher(cfg, mesh, schedule="continuous",
+                         policy=BucketPolicy([Bucket(64, 2)]),
+                         steps_per_dispatch=2).load_params(params)
+        b.submit(DecodeRequest("victim", [5, 9], max_new_tokens=30))
+        b.submit(DecodeRequest("other", [3, 4], max_new_tokens=30))
+        b.submit(DecodeRequest("late", [7, 11, 13], max_new_tokens=4))
+        sched = b.scheduler
+
+        def hook(pos, slots):
+            if pos == 6:
+                assert b.cancel("victim") is True
+
+        sched.on_boundary = hook
+        out = b.run()
+
+    assert "victim" not in out
+    assert set(out) == {"other", "late"}
+    assert sched.cancellations == 1
+    cancel_ev, = [e for e in sched.events if e.kind == "cancel"]
+    assert cancel_ev.request_id == "victim" and cancel_ev.step == 6
+    admit_late, = [e for e in sched.events
+                   if e.kind == "admit" and e.request_id == "late"]
+    # the canceled slot is reused at the SAME boundary
+    assert admit_late.slot == cancel_ev.slot
+    assert admit_late.step == cancel_ev.step
+    # ... and its state was wiped: the successor decodes exactly what it
+    # decodes when the canceled request never ran (nonzero admission
+    # offset covered by the RoPE relative-position contract)
+    assert out["late"].tokens == ref
+    assert len(out["other"].tokens) == 30   # survivor unharmed
+    assert b.pool.slot_resets >= 1          # host-side wipe actually ran
+
+
+def test_cancel_racing_completion_drops_tokens_and_frees_id(cfg, mesh,
+                                                            params):
+    """A cancel landing AFTER its request already finished (but before
+    run() returned) must still honor the contract: the tokens are
+    dropped, and the id is immediately reusable — even for a request
+    resubmitted under the same id DURING the same run, which a stale
+    cancel mark must not swallow."""
+    with mesh:
+        b = ServeBatcher(cfg, mesh, schedule="continuous",
+                         policy=BucketPolicy([Bucket(64, 2)]),
+                         ).load_params(params)
+        # old 'short' generates 2 tokens; the resubmitted one 3, so the
+        # result length proves WHICH request produced the tokens
+        b.submit(DecodeRequest("short", [5, 9], max_new_tokens=2))
+        b.submit(DecodeRequest("rider", [3, 4], max_new_tokens=16))
+        sched = b.scheduler
+        resubmitted = []
+
+        def hook(pos, slots):
+            live = {s.req.request_id for s in slots if s is not None}
+            # 'short' finished at step 2; cancel it well after the fact
+            if pos == 8 and "short" not in live:
+                assert b.cancel("short") is True
+            if pos == 10 and not resubmitted:
+                b.submit(DecodeRequest("short", [5, 9], max_new_tokens=3))
+                resubmitted.append(True)
+
+        sched.on_boundary = hook
+        out = b.run()
+        assert set(out) == {"rider", "short"}
+        assert len(out["short"].tokens) == 3   # the RESUBMITTED request
+        assert len(out["rider"].tokens) == 16
+        assert sched.cancellations == 1        # old tokens dropped once
+        assert not sched._canceled             # no stale mark left behind
+        assert not sched._stale_cancels
+
+        # and the id keeps working across runs
+        b.submit(DecodeRequest("short", [5, 9], max_new_tokens=2))
+        out = b.run()
+    assert len(out["short"].tokens) == 2
+
+
+def test_cancel_unknown_or_fifo_inflight_returns_false(cfg, mesh, params):
+    with mesh:
+        b = ServeBatcher(cfg, mesh).load_params(params)
+        assert b.cancel("nope") is False
+        b.submit(DecodeRequest("q", [1, 2], max_new_tokens=2))
+        assert b.cancel("q") is True        # queued: removable under fifo
+        assert b.run() == {}
+
+
+# ---------------------------------------------------------------------------
+# configuration validation
+# ---------------------------------------------------------------------------
+
+
+def test_steps_per_dispatch_validation(cfg, mesh):
+    with pytest.raises(ValueError, match="steps_per_dispatch"):
+        ServeBatcher(cfg, mesh, schedule="continuous", steps_per_dispatch=0)
+    with pytest.raises(ValueError, match="continuous"):
+        ServeBatcher(cfg, mesh, schedule="fifo", steps_per_dispatch=4)
+    # bucket positions must tile into micro-runs
+    with pytest.raises(ValueError, match="multiple"):
+        ServeBatcher(cfg, mesh, schedule="continuous",
+                     policy=BucketPolicy([Bucket(30, 2)]),
+                     steps_per_dispatch=4)
 
 
 def test_scheduler_stats_and_metrics_shape(cfg, mesh, params):
@@ -217,6 +471,9 @@ def test_scheduler_stats_and_metrics_shape(cfg, mesh, params):
         b.run()
     stats = b.stats()
     assert 0 < stats["scheduler"]["busy_slot_fraction"] <= 1
+    assert stats["scheduler"]["steps_per_dispatch"] == 1
+    assert stats["scheduler"]["micro_runs"] == stats["scheduler"]["steps"]
+    assert stats["scheduler"]["cancellations"] == 0
     (label, bucket_stats), = stats["buckets"].items()
     assert bucket_stats["requests"] == 2
     assert bucket_stats["slot_steps"] > 0
@@ -228,3 +485,215 @@ def test_scheduler_stats_and_metrics_shape(cfg, mesh, params):
 def test_fifo_batcher_rejects_unknown_schedule(cfg, mesh):
     with pytest.raises(ValueError, match="schedule"):
         ServeBatcher(cfg, mesh, schedule="lifo")
+
+
+# ---------------------------------------------------------------------------
+# property suite: scheduler invariants on a host-level executable stand-in
+# ---------------------------------------------------------------------------
+#
+# The invariants below are pure scheduling facts — they hold for any
+# model, so they are checked against a fake masked-decode executable
+# that runs entirely on the host. The fake emits token ``pos + i + 1``
+# on every active lane-step, which makes the result slices *positional
+# receipts*: request r admitted at ``start`` must receive exactly
+# ``[start+len(prompt), ..., start+len(prompt)+n-1]`` — any slot
+# overlap, mis-slice, or double-completion corrupts the receipt.
+
+
+class _HostExe:
+    def __init__(self):
+        self.bundle = types.SimpleNamespace(in_shardings=(None,) * 8)
+        self.calls = 0
+
+    def compiled(self, params, state, feed, prev, pos, start, active, fresh):
+        self.calls += 1
+        active = np.asarray(active)
+        k, B = active.shape
+        base = int(pos)
+        toks = (np.arange(base + 1, base + k + 1, dtype=np.int32)[:, None]
+                * active)
+        return toks, toks[-1], state
+
+
+class _HostPlan:
+    def __init__(self):
+        self.exes = {}
+
+    def serve_executable(self, kind, *, batch, max_len,
+                         steps_per_dispatch=1, **kw):
+        assert kind == "masked_decode"
+        key = (batch, max_len, steps_per_dispatch)
+        if key not in self.exes:
+            self.exes[key] = _HostExe()
+        return self.exes[key]
+
+
+class _NullPool:
+    def __init__(self):
+        self.slot_resets = 0
+
+    def acquire(self, batch, max_len):
+        return {}
+
+    def release(self, batch, max_len, state):
+        pass
+
+    def reset_slots(self, batch, max_len, state, slot_mask):
+        self.slot_resets += 1
+        return state
+
+
+def _expected_receipt(start, plen, n):
+    first = start + plen - 1
+    return list(range(first + 1, first + 1 + n))
+
+
+def _check_invariants(sched, reqs, results, k, canceled=()):
+    canceled = set(canceled)
+    # conservation: every non-canceled id completes exactly once, with
+    # exactly max_new_tokens tokens; canceled ids never complete
+    assert set(results) == {r.request_id for r in reqs} - canceled
+    by_id = {r.request_id: r for r in reqs}
+    admit_at = {}
+    for e in sched.events:
+        if e.kind == "admit":
+            admit_at[e.request_id] = e.step
+    for rid, res in results.items():
+        req = by_id[rid]
+        assert len(res.tokens) == req.max_new_tokens
+        # positional receipt: the slot held exactly these steps
+        assert res.tokens == _expected_receipt(
+            admit_at[rid], len(req.prompt), req.max_new_tokens), rid
+
+    # slot non-overlap: per slot, the event stream alternates
+    # admit -> (free | cancel) -> admit -> ...
+    occupancy = collections.defaultdict(lambda: None)
+    for e in sched.events:
+        if e.kind == "admit":
+            assert occupancy[e.slot] is None, (
+                f"slot {e.slot} double-admitted at {e.step}")
+            occupancy[e.slot] = e.request_id
+        else:
+            assert occupancy[e.slot] == e.request_id, (
+                f"slot {e.slot} freed by non-tenant at {e.step}")
+            occupancy[e.slot] = None
+
+    # refill gap bounded by the micro-run length
+    if sched.refills:
+        assert 1 <= sched.max_refill_gap <= k
+
+
+def _run_host_trace(lengths, k, batch, max_len=64, cancel_at=None):
+    """Drive the real scheduler over a host-level fake executable."""
+    policy = BucketPolicy([Bucket(max_len, batch)])
+    pool = _NullPool()
+    sched = ContinuousScheduler(_HostPlan(), policy, pool,
+                                steps_per_dispatch=k)
+    reqs = [DecodeRequest(f"h{i}", [1 + (i + j) % 7 for j in range(plen)],
+                          max_new_tokens=n)
+            for i, (plen, n) in enumerate(lengths)]
+    canceled = []
+    if cancel_at is not None:
+        boundary, idx = cancel_at
+        rid = reqs[idx % len(reqs)].request_id
+
+        def hook(pos, slots):
+            if pos >= boundary and rid not in canceled and any(
+                    s is not None and s.req.request_id == rid
+                    for s in slots):
+                sched.cancel(rid)
+                canceled.append(rid)
+
+        sched.on_boundary = hook
+    pending = collections.deque(reqs)
+    results = sched.run(pending, None, {})
+    return sched, reqs, results, canceled
+
+
+@pytest.mark.parametrize("seed", range(8))
+@pytest.mark.parametrize("k", [1, 2, 4, 8])
+def test_scheduler_invariants_seeded_streams(seed, k):
+    """Seeded random arrival/length streams (runs even without
+    hypothesis): non-overlap, FIFO-or-skip admission, gap <= k,
+    conservation, positional receipts."""
+    rng = np.random.default_rng(seed)
+    lengths = [(int(rng.integers(1, 7)), int(rng.integers(1, 13)))
+               for _ in range(int(rng.integers(1, 32)))]
+    cancel_at = ((int(rng.integers(0, 24)), int(rng.integers(0, 64)))
+                 if rng.random() < 0.5 else None)
+    sched, reqs, results, canceled = _run_host_trace(
+        lengths, k, batch=int(rng.integers(1, 4)), cancel_at=cancel_at)
+    _check_invariants(sched, reqs, results, k, canceled)
+    assert sched.cancellations == len(canceled)
+
+
+@given(st.lists(st.tuples(st.integers(min_value=1, max_value=6),
+                          st.integers(min_value=1, max_value=12)),
+                min_size=1, max_size=40),
+       st.sampled_from([1, 2, 4, 8]),
+       st.integers(min_value=1, max_value=3))
+@settings(max_examples=120, deadline=None)
+def test_scheduler_invariants_property(lengths, k, batch):
+    """Hypothesis-driven admission invariants over random streams."""
+    sched, reqs, results, _ = _run_host_trace(lengths, k, batch)
+    _check_invariants(sched, reqs, results, k)
+
+
+@given(st.lists(st.tuples(st.integers(min_value=1, max_value=6),
+                          st.integers(min_value=1, max_value=12)),
+                min_size=2, max_size=24),
+       st.sampled_from([1, 2, 4]),
+       st.integers(min_value=0, max_value=20),
+       st.integers(min_value=0, max_value=23))
+@settings(max_examples=60, deadline=None)
+def test_scheduler_conservation_under_cancellation(lengths, k, boundary,
+                                                   idx):
+    """Cancellation never breaks conservation: canceled ids complete
+    zero times, everyone else exactly once."""
+    sched, reqs, results, canceled = _run_host_trace(
+        lengths, k, batch=2, cancel_at=(boundary * k, idx))
+    _check_invariants(sched, reqs, results, k, canceled)
+
+
+@given(st.integers(min_value=1, max_value=6),
+       st.integers(min_value=1, max_value=10),
+       st.integers(min_value=1, max_value=24),
+       st.sampled_from([1, 2, 4, 8]),
+       st.integers(min_value=1, max_value=3))
+@settings(max_examples=80, deadline=None)
+def test_admission_is_fifo_for_uniform_streams(plen, n, count, k, batch):
+    """When every request has the same shape (no capacity skips are
+    possible among peers), admission order == submission order."""
+    sched, reqs, results, _ = _run_host_trace([(plen, n)] * count, k, batch)
+    admits = [e.request_id for e in sched.events if e.kind == "admit"]
+    assert admits == [r.request_id for r in reqs]
+    _check_invariants(sched, reqs, results, k)
+
+
+def test_fifo_order_preserved_for_capacity_skips():
+    """A request skipped for lack of remaining positions keeps its queue
+    rank: it is admitted before anything submitted after it, as soon as
+    capacity allows."""
+    # big needs 8+24-1=31 of 32 positions; the shorts can slot around it
+    lengths = [(8, 24), (2, 3), (2, 3), (8, 24)]
+    sched, reqs, results, _ = _run_host_trace(lengths, 2, batch=2,
+                                              max_len=32)
+    _check_invariants(sched, reqs, results, 2)
+    admits = [e.request_id for e in sched.events if e.kind == "admit"]
+    # h3 (second big) cannot jump a dispatch ahead of h1/h2's completions
+    assert admits.index("h1") < admits.index("h3")
+    assert admits.index("h2") < admits.index("h3")
+
+
+def test_host_trace_chunked_prefill_dispatch_count():
+    """Receipt check at scale: a 512-token prompt costs ~512/k
+    micro-runs, not 512 — the chunked-prefill admission headline."""
+    lengths = [(512, 8)]
+    counts = {}
+    for k in (1, 8):
+        sched, reqs, results, _ = _run_host_trace(lengths, k, batch=1,
+                                                  max_len=1024)
+        _check_invariants(sched, reqs, results, k)
+        counts[k] = sched.micro_runs
+    assert counts[1] == 519                 # one step per live position
+    assert counts[8] == 65                  # ceil(519 / 8)

@@ -223,6 +223,51 @@ def test_cache_single_flight_concurrent_misses():
     assert len({id(r.compiled) for r in results if r.key == key}) == 1
 
 
+def test_cache_keys_distinct_steps_per_dispatch(cfg, mesh):
+    """Micro-run executables are keyed by k: a k-step scanned program is
+    a different executable than the single-step one, so distinct k
+    values must never collide — and re-requesting a warm k must be a
+    pure cache hit (zero new lowerings)."""
+    from repro.plan import build_plan
+
+    plan = build_plan(cfg, None, mesh_spec=mesh)
+    e1 = plan.serve_executable("masked_decode", batch=2, max_len=64,
+                               steps_per_dispatch=1)
+    e4 = plan.serve_executable("masked_decode", batch=2, max_len=64,
+                               steps_per_dispatch=4)
+    assert e1 is not e4
+    assert e1.key != e4.key
+    assert (e1.key.steps, e4.key.steps) == (1, 4)
+    warm = dict(plan.cache.stats())
+    assert warm["entries"] == 2 and warm["compiles"] == 2
+
+    again = plan.serve_executable("masked_decode", batch=2, max_len=64,
+                                  steps_per_dispatch=4)
+    assert again is e4                       # same k: resident executable
+    after = plan.cache.stats()
+    assert after["hits"] == warm["hits"] + 1
+    assert after["lowerings"] == warm["lowerings"]   # zero new lowerings
+    assert after["compiles"] == warm["compiles"]
+
+
+def test_steps_per_dispatch_rejected_for_other_kinds(cfg, mesh):
+    """k only parameterizes the masked-decode micro-run; silently keying
+    a prefill/decode build by k would fracture the cache."""
+    from repro.plan import build_plan
+    from repro.serve import CacheKey
+
+    plan = build_plan(cfg, None, mesh_spec=mesh)
+    with pytest.raises(ValueError, match="masked_decode"):
+        plan.serve_executable("decode", batch=2, max_len=64,
+                              steps_per_dispatch=4)
+    with pytest.raises(ValueError, match="steps_per_dispatch"):
+        plan.serve_executable("masked_decode", batch=2, max_len=64,
+                              steps_per_dispatch=0)
+    # CacheKey default keeps pre-micro-run keys stable (steps == 1)
+    key = CacheKey("a", "decode", 1, 8, 0, "megatron", (("data", 1),))
+    assert key.steps == 1
+
+
 def test_distinct_buckets_get_distinct_executables(cfg, mesh, params):
     with mesh:
         b = ServeBatcher(cfg, mesh,
@@ -377,6 +422,8 @@ def test_state_pool_reset_slots_no_leak(cfg, mesh):
 @pytest.mark.parametrize("argv", [
     ["--arch", "yi-6b", "--debug", "--tokens", "0"],
     ["--arch", "yi-6b", "--debug", "--rounds", "0"],
+    ["--arch", "yi-6b", "--debug", "--steps-per-dispatch", "0"],
+    ["--arch", "yi-6b", "--debug", "--steps-per-dispatch", "4"],
 ])
 def test_serve_cli_rejects_bad_counts(monkeypatch, argv):
     from repro.launch import serve
