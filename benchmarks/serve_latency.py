@@ -17,18 +17,42 @@ fractions, and p50/p99 per-slot idle time. ``k_sweep`` summarizes
 tokens/s per k; ``speedup_k4_vs_k1`` is the micro-run amortization
 headline (CI asserts k=4 >= k=1).
 
+The ``traffic`` section replays ONE seeded Poisson trace (heavy-tailed
+lengths, priority classes, per-request deadlines — ``repro.serve.
+traffic``) through each admission policy in **virtual time**: arrivals
+are injected at micro-run boundaries with the scheduler's own step
+counter as the clock, so TTFT and goodput-under-deadline (fraction of
+all arrivals whose last token lands before their deadline) are
+bit-deterministic and CI-gateable. The headline is
+``goodput_edf_minus_fifo`` (CI asserts >= 0: shedding already-expired
+requests and running the tightest deadline first must not lose to
+arrival order under the same overload). An ``async`` subsection replays
+a second trace with abandonment through the real
+:class:`~repro.serve.server.AsyncServeServer` in scaled wall-clock time
+and records client-side p50/p99 TTFT and outcome counts.
+
 Also exposes ``run()`` rows for the ``benchmarks.run`` CSV harness.
 """
 
 from __future__ import annotations
 
 import argparse
+import collections
+import dataclasses
 import json
 import time
 
 from repro.configs import reduced_config
 from repro.plan import MeshSpec, build_plan
-from repro.serve import Bucket, BucketPolicy, DecodeRequest
+from repro.serve import (
+    Bucket,
+    BucketPolicy,
+    DecodeRequest,
+    TrafficSpec,
+    generate_traffic,
+    make_policy,
+)
+from repro.serve.traffic import summarize
 
 WAVES = 4          # warm waves measured (one cold wave discarded)
 TOKENS = 8         # generated per request
@@ -155,7 +179,202 @@ def measure_churn(waves: int = 3) -> dict:
     return out
 
 
-def measure(waves: int = WAVES, tokens: int = TOKENS) -> dict:
+# traffic section: one overloaded Poisson trace (arrival rate ~2x the
+# bucket's service capacity) so admission order actually matters, replayed
+# per policy in virtual time; a second, lighter trace with abandonment
+# drives the async wall-clock subsection
+TRAFFIC_SEED = 7
+TRAFFIC_N = 48
+TRAFFIC_K = 4                       # steps_per_dispatch for all replays
+TRAFFIC_POLICIES = ("fifo", "priority", "edf")
+TRAFFIC_SPEC = TrafficSpec(rate=2.0, max_prompt=12, max_new_tokens=12,
+                           deadline_slack=(1.2, 3.5))
+ASYNC_SPEC = TrafficSpec(rate=2.0, max_prompt=12, max_new_tokens=12,
+                         deadline_prob=0.0, abandon_prob=0.3,
+                         patience_mean=8.0)
+ASYNC_N = 24
+ASYNC_TICK_S = 0.02                 # wall-clock seconds per trace tick
+
+
+def _pct(vals, p):
+    v = sorted(vals)
+    return round(v[min(len(v) - 1, int(p * len(v)))], 3) if v else 0.0
+
+
+def _traffic_batcher(admission_name=None):
+    """Fresh warm continuous batcher on the churn bucket; returns it plus
+    the post-warmup lowering count (the zero-lowerings baseline)."""
+    cfg = reduced_config(ARCH).with_(n_layers=2, vocab=64)
+    policy = BucketPolicy([Bucket(CHURN_MAX_LEN, CHURN_BATCH)])
+    plan = build_plan(cfg, None, mesh_spec=MeshSpec.debug(1, 1))
+    admission = make_policy(admission_name) if admission_name else None
+    with plan.activate():
+        b = plan.make_batcher(policy=policy, schedule="continuous",
+                              steps_per_dispatch=TRAFFIC_K,
+                              admission=admission)
+        b.init_demo_params(seed=0)
+        for i in range(2):
+            b.submit(DecodeRequest(f"warm{i}", [1, 2, 3],
+                                   max_new_tokens=4))
+        b.run()
+    b.metrics = {}
+    return b, b.cache.stats()["lowerings"]
+
+
+def _replay_virtual(trace, admission_name: str) -> dict:
+    """Replay one arrival trace under one policy, virtual time.
+
+    The clock is the scheduler's global step counter: the ``on_boundary``
+    hook releases every arrival whose tick has come, so a request lands
+    in the SAME in-flight dispatch it would under a resident server, and
+    the whole replay is deterministic. ``on_tokens`` timestamps first
+    tokens and completions in the same tick domain as the trace's
+    deadlines (when the queue drains before the next arrival, the replay
+    jumps straight to it — overload keeps that rare past the first tick).
+    """
+    need = {tr.request.request_id: tr.request.max_new_tokens
+            for tr in trace}
+    first_tick, done_tick = {}, {}
+    got = collections.defaultdict(int)
+    b, warm_lowerings = _traffic_batcher(admission_name)
+    sched = b.scheduler
+    idx = 0
+
+    def release_due(pos=None, slots=None):
+        nonlocal idx
+        now = float(sched.steps)
+        while idx < len(trace) and trace[idx].at <= now:
+            b.submit(trace[idx].request)
+            idx += 1
+
+    def on_tokens(deltas):
+        # called before the step counter advances: these tokens landed
+        # during the micro-run that just ran, i.e. by steps + k
+        tick = float(sched.steps + TRAFFIC_K)
+        for rid, toks in deltas.items():
+            first_tick.setdefault(rid, tick)
+            got[rid] += len(toks)
+            if got[rid] >= need.get(rid, 1 << 30):
+                done_tick.setdefault(rid, tick)
+
+    sched.on_boundary = release_due
+    sched.on_tokens = on_tokens
+    shed = set()
+    with b.plan.activate():
+        try:
+            while idx < len(trace) or b._pending:
+                if not b._pending:      # idle: jump to the next arrival
+                    b.submit(trace[idx].request)
+                    idx += 1
+                b.run()
+                shed |= b.last_shed
+        finally:
+            sched.on_boundary = None
+            sched.on_tokens = None
+    ttfts, good, late = [], 0, 0
+    for tr in trace:
+        rid = tr.request.request_id
+        if rid in first_tick:
+            ttfts.append(max(0.0, first_tick[rid] - tr.at))
+        if rid in done_tick:
+            dl = tr.request.deadline
+            if dl is None or done_tick[rid] <= dl:
+                good += 1
+            else:
+                late += 1
+    return {
+        "requests": len(trace),
+        "completed": len(done_tick),
+        "shed": len(shed),
+        "deadline_misses": late,
+        "goodput": round(good / len(trace), 4),
+        "p50_ttft_ticks": _pct(ttfts, 0.50),
+        "p99_ttft_ticks": _pct(ttfts, 0.99),
+        "steps": sched.steps,
+        "new_lowerings_after_warmup":
+            b.cache.stats()["lowerings"] - warm_lowerings,
+    }
+
+
+def _measure_async(trace) -> dict:
+    """The same load through the real asyncio front-end, wall clock.
+
+    Arrivals are scheduled at ``at * ASYNC_TICK_S`` seconds; impatient
+    users abandon their stream if the first token misses their patience
+    window (disconnect -> boundary cancellation). Client-side TTFT
+    percentiles come from the server's own stats.
+    """
+    import asyncio
+
+    from repro.serve import AsyncServeServer, RequestShed
+
+    b, warm_lowerings = _traffic_batcher()
+
+    async def drive():
+        async with AsyncServeServer(b) as server:
+            loop = asyncio.get_running_loop()
+            t0 = loop.time()
+
+            async def one(tr):
+                await asyncio.sleep(max(
+                    0.0, tr.at * ASYNC_TICK_S - (loop.time() - t0)))
+                gen = server.stream(tr.request)
+                try:
+                    if tr.patience is not None:
+                        budget = max(0.001,
+                                     (tr.patience - tr.at) * ASYNC_TICK_S)
+                        try:
+                            await asyncio.wait_for(gen.__anext__(), budget)
+                        except asyncio.TimeoutError:
+                            return "abandoned"
+                        except StopAsyncIteration:
+                            return "done"
+                    async for _ in gen:
+                        pass
+                    return "done"
+                except RequestShed:
+                    return "shed"
+                finally:
+                    await gen.aclose()
+
+            outcomes = await asyncio.gather(*[one(tr) for tr in trace])
+            return list(outcomes), server.stats()
+
+    with b.plan.activate():
+        outcomes, sstats = asyncio.run(drive())
+    return {
+        "requests": len(trace),
+        "tick_seconds": ASYNC_TICK_S,
+        "client_outcomes": {o: outcomes.count(o)
+                            for o in sorted(set(outcomes))},
+        "p50_ttft_s": sstats["p50_ttft_s"],
+        "p99_ttft_s": sstats["p99_ttft_s"],
+        "p50_total_s": sstats["p50_total_s"],
+        "cancellations": sstats["scheduler"]["cancellations"],
+        "new_lowerings_after_warmup":
+            b.cache.stats()["lowerings"] - warm_lowerings,
+    }
+
+
+def measure_traffic() -> dict:
+    """Admission-policy shoot-out on one seeded trace + async replay."""
+    trace = generate_traffic(TRAFFIC_SPEC, TRAFFIC_N, TRAFFIC_SEED)
+    out = {
+        "spec": dataclasses.asdict(TRAFFIC_SPEC),
+        "load": summarize(trace),
+        "policies": {name: _replay_virtual(trace, name)
+                     for name in TRAFFIC_POLICIES},
+    }
+    out["goodput_edf_minus_fifo"] = round(
+        out["policies"]["edf"]["goodput"]
+        - out["policies"]["fifo"]["goodput"], 4)
+    out["async"] = _measure_async(
+        generate_traffic(ASYNC_SPEC, ASYNC_N, TRAFFIC_SEED + 1, tag="a"))
+    return out
+
+
+def measure(waves: int = WAVES, tokens: int = TOKENS,
+            traffic: bool = True) -> dict:
     cfg = reduced_config(ARCH).with_(n_layers=2, vocab=64)
     plan = build_plan(cfg, None, mesh_spec=MeshSpec.debug(1, 1))
     with plan.activate():
@@ -188,7 +407,7 @@ def measure(waves: int = WAVES, tokens: int = TOKENS) -> dict:
             us_per_token=round(busy / m["new_tokens"] * 1e6, 3)
             if m["new_tokens"] else 0.0,
         )
-    return {
+    out = {
         "arch": ARCH,
         "waves": waves,
         "tokens_per_request": tokens,
@@ -198,11 +417,14 @@ def measure(waves: int = WAVES, tokens: int = TOKENS) -> dict:
         "pool": stats["pool"],
         "churn": measure_churn(),
     }
+    if traffic:
+        out["traffic"] = measure_traffic()
+    return out
 
 
 def run():
     """Rows for the benchmarks.run CSV harness."""
-    data = measure(waves=2, tokens=4)
+    data = measure(waves=2, tokens=4, traffic=False)
     rows = []
     for label, m in data["buckets"].items():
         rows.append({
@@ -216,13 +438,48 @@ def run():
     return rows
 
 
+def _report_traffic(traffic: dict) -> None:
+    """Print + gate the traffic section (shared by --only traffic)."""
+    for name in TRAFFIC_POLICIES:
+        p = traffic["policies"][name]
+        print(f"traffic/{name}: goodput {p['goodput']}, "
+              f"{p['completed']}/{p['requests']} completed "
+              f"({p['shed']} shed, {p['deadline_misses']} late), "
+              f"p50 TTFT {p['p50_ttft_ticks']} ticks, "
+              f"p99 {p['p99_ttft_ticks']} ticks")
+        assert p["new_lowerings_after_warmup"] == 0, \
+            f"traffic/{name} lowered after warmup"
+    print(f"traffic: EDF goodput - FIFO goodput = "
+          f"{traffic['goodput_edf_minus_fifo']} (gate: >= 0)")
+    assert traffic["goodput_edf_minus_fifo"] >= 0, (
+        "EDF admission lost goodput-under-deadline to FIFO on the same "
+        "trace — shedding expired requests must not hurt")
+    a = traffic["async"]
+    print(f"traffic/async: p50 TTFT {a['p50_ttft_s']}s, "
+          f"p99 {a['p99_ttft_s']}s, outcomes {a['client_outcomes']}, "
+          f"{a['cancellations']} boundary cancellations")
+    assert a["new_lowerings_after_warmup"] == 0, \
+        "async streaming replay lowered after warmup"
+
+
 def main():
     ap = argparse.ArgumentParser(
         description="Warm-cache serve latency per bucket (debug mesh)")
     ap.add_argument("--out", default="BENCH_serve.json")
     ap.add_argument("--waves", type=int, default=WAVES)
     ap.add_argument("--tokens", type=int, default=TOKENS)
+    ap.add_argument("--only", default="all", choices=["all", "traffic"],
+                    help="'traffic' runs just the admission-policy / "
+                         "async replay section (the CI traffic-smoke job)")
     args = ap.parse_args()
+    if args.only == "traffic":
+        data = {"traffic": measure_traffic()}
+        with open(args.out, "w") as f:
+            json.dump(data, f, indent=2, sort_keys=True)
+            f.write("\n")
+        _report_traffic(data["traffic"])
+        print(f"wrote {args.out} (traffic section only)")
+        return
     data = measure(waves=args.waves, tokens=args.tokens)
     with open(args.out, "w") as f:
         json.dump(data, f, indent=2, sort_keys=True)
@@ -246,6 +503,7 @@ def main():
         if schedule == "continuous":
             assert churn[label]["new_lowerings_after_warmup"] == 0, \
                 f"{label} scheduler lowered after warmup under churn"
+    _report_traffic(data["traffic"])
     print(f"wrote {args.out} (cache hits={hits}, "
           f"compiles={data['warm_cache']['compiles']})")
 

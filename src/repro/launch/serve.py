@@ -39,15 +39,24 @@ Flags:
                prompts are chunk-prefilled k tokens per call). Needs
                --schedule continuous when > 1; bucket max_len must be a
                multiple of k. Default 1.
+  --policy     boundary-time admission policy (continuous only):
+               fifo (arrival order, default) | priority (strict classes,
+               per-tenant fairness, aging) | edf (earliest deadline
+               first, expired requests shed)
+  --stream     drive the waves through the asyncio streaming front-end
+               (repro.serve.server.AsyncServeServer): concurrent
+               submission, per-micro-run token streams, p50/p99 TTFT
+               printed from the server's client-side stats
 """
 
 from __future__ import annotations
 
 import argparse
+import asyncio
 
 from repro.models import SHAPES
 from repro.plan import MeshSpec, build_plan
-from repro.serve import BucketPolicy, DecodeRequest, ServeBatcher
+from repro.serve import BucketPolicy, DecodeRequest, ServeBatcher, make_policy
 
 
 def build_batcher(args) -> ServeBatcher:
@@ -61,8 +70,10 @@ def build_batcher(args) -> ServeBatcher:
         policy = BucketPolicy.production(shape.global_batch, shape.seq_len)
     plan = build_plan(args.arch, None, mode=args.mode, mesh_spec=mesh_spec,
                       quantized=args.quantized, debug=args.debug)
+    admission = make_policy(args.policy) if args.policy != "fifo" else None
     batcher = plan.make_batcher(policy=policy, schedule=args.schedule,
-                                steps_per_dispatch=args.steps_per_dispatch)
+                                steps_per_dispatch=args.steps_per_dispatch,
+                                admission=admission)
     with plan.activate():
         batcher.init_demo_params(seed=0)
     return batcher
@@ -99,6 +110,13 @@ def main():
                     help="continuous micro-run length k: scan k masked "
                          "steps per executable call (>= 1; > 1 needs "
                          "--schedule continuous)")
+    ap.add_argument("--policy", default="fifo",
+                    choices=["fifo", "priority", "edf"],
+                    help="boundary-time admission policy (non-fifo needs "
+                         "--schedule continuous)")
+    ap.add_argument("--stream", action="store_true",
+                    help="drive the waves through the asyncio streaming "
+                         "front-end (needs --schedule continuous)")
     args = ap.parse_args()
     if args.tokens < 1:
         ap.error("--tokens must be >= 1")
@@ -108,26 +126,64 @@ def main():
         ap.error("--steps-per-dispatch must be >= 1")
     if args.steps_per_dispatch > 1 and args.schedule != "continuous":
         ap.error("--steps-per-dispatch > 1 needs --schedule continuous")
+    if args.policy != "fifo" and args.schedule != "continuous":
+        ap.error("--policy needs --schedule continuous")
+    if args.stream and args.schedule != "continuous":
+        ap.error("--stream needs --schedule continuous")
 
     batcher = build_batcher(args)
     batch = batcher.policy.buckets[0].batch
     # continuous batching is about refilling freed slots from a deep
     # queue: submit two requests per slot so slot reuse is observable
     wave_size = batch * 2 if args.schedule == "continuous" else batch
+
+    def wave_requests(wave: int):
+        # priorities/tenants cycle so --policy priority has classes to
+        # order; deadlines are generous (nothing sheds in a smoke run)
+        import time as _time
+
+        deadline = (_time.monotonic() + 120.0
+                    if args.policy == "edf" and args.stream else
+                    1_000_000.0 if args.policy == "edf" else None)
+        return [DecodeRequest(
+            f"w{wave}r{i}", [1 + (i + j) % 7 for j in range(i % 3 + 2)],
+            max_new_tokens=args.tokens, priority=i % 3,
+            tenant=f"tenant{i % 2}", deadline=deadline)
+            for i in range(wave_size)]
+
     t_first = None
-    with batcher.plan.activate():
-        for wave in range(args.rounds):
-            for i in range(wave_size):
-                batcher.submit(DecodeRequest(
-                    f"w{wave}r{i}", [1 + (i + j) % 7 for j in range(i % 3 + 2)],
-                    max_new_tokens=args.tokens))
-            results = batcher.run()
-            if t_first is None and results:
-                t_first = min(r.prefill_seconds for r in results.values())
-            sample = results[sorted(results)[0]]
-            print(f"wave {wave}: {len(results)} requests x {args.tokens} "
-                  f"tokens, sample {sample.request_id} -> "
-                  f"{sample.tokens[:8]}")
+    if args.stream:
+        from repro.serve import AsyncServeServer
+
+        async def run_streaming():
+            async with AsyncServeServer(batcher) as server:
+                for wave in range(args.rounds):
+                    results = await asyncio.gather(*[
+                        server.generate(r) for r in wave_requests(wave)])
+                    sample = min(results, key=lambda r: r.request_id)
+                    print(f"wave {wave}: {len(results)} requests x "
+                          f"{args.tokens} tokens (streamed), sample "
+                          f"{sample.request_id} -> {sample.tokens[:8]}")
+                return server.stats()
+
+        with batcher.plan.activate():
+            sstats = asyncio.run(run_streaming())
+        print(f"stream: p50 TTFT {sstats['p50_ttft_s']}s, "
+              f"p99 TTFT {sstats['p99_ttft_s']}s, "
+              f"outcomes {sstats['outcomes']}")
+    else:
+        with batcher.plan.activate():
+            for wave in range(args.rounds):
+                for r in wave_requests(wave):
+                    batcher.submit(r)
+                results = batcher.run()
+                if t_first is None and results:
+                    t_first = min(r.prefill_seconds
+                                  for r in results.values())
+                sample = results[sorted(results)[0]]
+                print(f"wave {wave}: {len(results)} requests x "
+                      f"{args.tokens} tokens, sample {sample.request_id} "
+                      f"-> {sample.tokens[:8]}")
 
     stats = batcher.stats()
     for label, m in stats["buckets"].items():

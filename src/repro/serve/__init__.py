@@ -15,6 +15,17 @@ Public surface:
   ``lower().compile()`` cache with hit/miss/lowering/compile counters.
 * :class:`~repro.serve.state_pool.StatePool` — per-bucket resident
   KV-cache/SSM state pools, with donated whole-state and per-slot resets.
+* :class:`~repro.serve.server.AsyncServeServer` — asyncio streaming
+  front-end: concurrent arrivals, per-micro-run token streams,
+  disconnect-driven cancellation, deadline shedding.
+* ``repro.serve.policy`` — boundary-time admission policies
+  (:class:`~repro.serve.policy.FifoPolicy`,
+  :class:`~repro.serve.policy.PriorityPolicy`,
+  :class:`~repro.serve.policy.DeadlinePolicy`) selected via
+  ``ServeBatcher(admission=...)``.
+* :func:`~repro.serve.traffic.generate_traffic` — seeded synthetic
+  many-user load (Poisson arrivals, heavy-tailed lengths, priority
+  classes, deadlines, abandonment) for benchmarks and load tests.
 
 See docs/serving.md for the bucket policy, cache keys, and lifecycle.
 """
@@ -28,20 +39,39 @@ from repro.serve.batcher import (
     ServeBatcher,
 )
 from repro.serve.cache import CachedExecutable, CacheKey, ExecutableCache
+from repro.serve.policy import (
+    AdmissionPolicy,
+    DeadlinePolicy,
+    FifoPolicy,
+    PriorityPolicy,
+    make_policy,
+)
 from repro.serve.scheduler import ContinuousScheduler, SlotEvent
+from repro.serve.server import AsyncServeServer, RequestShed
 from repro.serve.state_pool import StatePool
+from repro.serve.traffic import TrafficRequest, TrafficSpec, generate_traffic
 
 __all__ = [
+    "AdmissionPolicy",
+    "AsyncServeServer",
     "Bucket",
     "BucketMetrics",
     "BucketPolicy",
     "CacheKey",
     "CachedExecutable",
     "ContinuousScheduler",
+    "DeadlinePolicy",
     "DecodeRequest",
     "ExecutableCache",
+    "FifoPolicy",
+    "PriorityPolicy",
     "RequestResult",
+    "RequestShed",
     "ServeBatcher",
     "SlotEvent",
     "StatePool",
+    "TrafficRequest",
+    "TrafficSpec",
+    "generate_traffic",
+    "make_policy",
 ]

@@ -55,11 +55,24 @@ def _pow2ceil(n: int) -> int:
 
 @dataclasses.dataclass
 class DecodeRequest:
-    """One sequence to continue: prompt token ids + how many to generate."""
+    """One sequence to continue: prompt token ids + how many to generate.
+
+    The scheduling fields are read by the continuous scheduler's
+    admission policy (``repro.serve.policy``) and ignored everywhere
+    else: ``priority`` is the strict-priority class (0 = most urgent),
+    ``tenant`` the fairness bucket inside a class, and ``deadline`` an
+    absolute time in the scheduler's clock domain (global steps by
+    default, wall-clock seconds under the async server) by which the
+    last token must be produced — EDF sheds the request instead of
+    admitting it once the deadline has passed.
+    """
 
     request_id: str
     prompt: Sequence[int]
     max_new_tokens: int = 8
+    priority: int = 0
+    tenant: str = "default"
+    deadline: Optional[float] = None
 
     def __post_init__(self):
         self.prompt = [int(t) for t in self.prompt]
@@ -202,7 +215,8 @@ class ServeBatcher:
                  policy: Optional[BucketPolicy] = None,
                  cache: Optional[ExecutableCache] = None,
                  schedule: str = "fifo",
-                 steps_per_dispatch: int = 1):
+                 steps_per_dispatch: int = 1,
+                 admission=None):
         from repro.plan import ExecutionPlan, build_plan
 
         if isinstance(plan_or_cfg, ExecutionPlan):
@@ -228,6 +242,10 @@ class ServeBatcher:
             raise ValueError(
                 "steps_per_dispatch > 1 needs schedule='continuous' — the "
                 "fifo path amortizes prompts through its prefill scan")
+        if admission is not None and schedule != "continuous":
+            raise ValueError(
+                "admission policies need schedule='continuous' — the "
+                "fixed-group fifo path has no boundary seam to apply them")
         self.schedule = schedule
         self.steps_per_dispatch = steps_per_dispatch
         self.policy = policy or BucketPolicy.debug()
@@ -237,13 +255,17 @@ class ServeBatcher:
         self._pending: Deque[DecodeRequest] = collections.deque()
         self._pending_ids: set = set()
         self._argmax_fns: Dict[str, object] = {}
+        # ids the scheduler's admission policy shed during the last run()
+        # (EDF deadline misses): completed zero times, ids reusable
+        self.last_shed: set = set()
         self._scheduler = None
         if schedule == "continuous":
             from repro.serve.scheduler import ContinuousScheduler
 
             self._scheduler = ContinuousScheduler(
                 self.plan, self.policy, self.pool,
-                steps_per_dispatch=steps_per_dispatch)
+                steps_per_dispatch=steps_per_dispatch,
+                admission=admission)
 
     @property
     def scheduler(self):
@@ -355,6 +377,8 @@ class ServeBatcher:
         if self._scheduler is not None:
             results = self._scheduler.run(self._pending, self.params,
                                           self.metrics)
+            self.last_shed = self._scheduler.drain_shed()
+            self._pending_ids.difference_update(self.last_shed)
         else:
             while self._pending:
                 group, bucket = self._form_group()

@@ -43,9 +43,25 @@ and are fetched once when the dispatch drains.
 :meth:`ContinuousScheduler.cancel` marks an in-flight request for
 removal; its slot is freed (and its state lanes wiped through
 ``StatePool.reset_slots``) at the next micro-run boundary, and it never
-appears in the results. ``on_boundary`` is an optional host hook invoked
-at every boundary — the seam where cancellation, priority, or deadline
-policies plug in without touching the compiled step.
+appears in the results.
+
+Boundary seams (all host-side, none touch the compiled step):
+
+* ``admission`` — an :class:`~repro.serve.policy.AdmissionPolicy` that
+  picks which queued request takes each freed slot (FIFO by default;
+  strict-priority with per-tenant fairness and EDF with deadline-miss
+  shedding ship in ``repro.serve.policy``). Requests the policy sheds
+  are reported through ``on_shed`` / :meth:`drain_shed` and never run.
+* ``on_boundary`` — host hook invoked at every boundary before frees and
+  admission (where the async server drains its intake queue and where
+  tests inject cancels).
+* ``on_tokens`` — streaming hook: when set, each micro-run's tokens are
+  fetched at the boundary and delivered as ``{request_id: [tokens]}``
+  deltas (the async server's per-request streams); when unset the
+  scheduler keeps its fetch-once-at-drain behavior.
+* ``clock`` — the admission policy's time source: ``None`` means the
+  deterministic global step counter; the async server installs
+  ``time.monotonic`` so deadlines are wall-clock.
 """
 
 from __future__ import annotations
@@ -108,7 +124,10 @@ class ContinuousScheduler:
     """
 
     def __init__(self, plan, policy: BucketPolicy, pool: StatePool,
-                 steps_per_dispatch: int = 1):
+                 steps_per_dispatch: int = 1, admission=None,
+                 clock: Optional[Callable[[], float]] = None):
+        from repro.serve.policy import FifoPolicy
+
         if steps_per_dispatch < 1:
             raise ValueError(
                 f"steps_per_dispatch must be >= 1, got {steps_per_dispatch}")
@@ -122,6 +141,8 @@ class ContinuousScheduler:
         self.policy = policy
         self.pool = pool
         self.steps_per_dispatch = steps_per_dispatch
+        self.admission = admission if admission is not None else FifoPolicy()
+        self.clock = clock
         # counters (tests + benchmark): slot_steps counts every lane-step
         # of every dispatch; idle_slot_steps the lanes that ran inert
         self.dispatches = 0
@@ -129,6 +150,7 @@ class ContinuousScheduler:
         self.steps = 0
         self.admissions = 0
         self.cancellations = 0
+        self.sheds = 0
         self.slot_steps = 0
         self.idle_slot_steps = 0
         self.refills = 0
@@ -146,10 +168,21 @@ class ContinuousScheduler:
         # an EARLIER dispatch of the current run(); run() drops their
         # results before merging anything newer
         self._stale_cancels: Set[str] = set()
+        # ids the admission policy shed (deadline already missed); they
+        # never run and never appear in results — the batcher drains
+        # this set after run() to free the ids, the async server is
+        # notified per-id through on_shed at shed time
+        self._shed_ids: Set[str] = set()
         # host hook run at every boundary BEFORE frees/admission — the
         # plug-in point for cancellation and admission-policy experiments
         self.on_boundary: Optional[Callable[[int, List[Optional[_Slot]]],
                                             None]] = None
+        # streaming: per-micro-run {request_id: [new tokens]} deltas,
+        # fetched at the boundary right after the executable call
+        self.on_tokens: Optional[Callable[[Dict[str, List[int]]],
+                                          None]] = None
+        # per-id shed notification (async server stream termination)
+        self.on_shed: Optional[Callable[[str], None]] = None
 
     # -- cancellation ---------------------------------------------------------
 
@@ -168,33 +201,50 @@ class ContinuousScheduler:
         """
         self._canceled.add(request_id)
 
+    # -- shedding -------------------------------------------------------------
+
+    def drain_shed(self) -> Set[str]:
+        """Ids the admission policy shed since the last drain (EDF
+        deadline misses). The batcher calls this after ``run()`` so the
+        ids become reusable; they completed zero times."""
+        shed, self._shed_ids = self._shed_ids, set()
+        return shed
+
     # -- admission ------------------------------------------------------------
+
+    def _now(self) -> float:
+        """The admission policy's clock: global steps unless overridden."""
+        return self.clock() if self.clock is not None else float(self.steps)
 
     def _admit(self, pending: Deque[DecodeRequest], bucket: Bucket,
                slots: List[Optional[_Slot]], pos: int,
                freed_at: List[int]) -> List[int]:
         """Fill free slots from the queue; returns freshly admitted lanes.
 
-        Queue order is preserved for requests that are skipped (wrong
-        bucket or not enough positions left in this dispatch) — they stay
-        for a later dispatch, exactly like the FIFO group former.
+        Which request takes a slot is the admission policy's call (FIFO
+        default: first queued request that fits, skipped-prefix order
+        preserved). Requests a deadline policy sheds here never run:
+        they are removed from the queue, counted, and reported through
+        the shed channel.
         """
+        now = self._now()
+        for req in self.admission.shed(pending, now):
+            self.sheds += 1
+            self._shed_ids.add(req.request_id)
+            self.events.append(SlotEvent("shed", pos, -1, req.request_id))
+            if self.on_shed is not None:
+                self.on_shed(req.request_id)
+
+        def fits(req: DecodeRequest) -> bool:
+            need = len(req.prompt) + req.max_new_tokens - 1
+            return req.need_len <= bucket.max_len and \
+                pos + need <= bucket.max_len
+
         admitted: List[int] = []
         for b in range(bucket.batch):
             if slots[b] is not None or not pending:
                 continue
-            kept: Deque[DecodeRequest] = collections.deque()
-            chosen = None
-            while pending:
-                req = pending.popleft()
-                need = len(req.prompt) + req.max_new_tokens - 1
-                if req.need_len <= bucket.max_len and \
-                        pos + need <= bucket.max_len:
-                    chosen = req
-                    break
-                kept.append(req)
-            # splice the skipped prefix back in front, order intact
-            pending.extendleft(reversed(kept))
+            chosen = self.admission.select(pending, fits, now)
             if chosen is None:
                 break
             slots[b] = _Slot(chosen, start=pos)
@@ -248,7 +298,10 @@ class ContinuousScheduler:
                   ) -> Dict[str, RequestResult]:
         t0 = time.perf_counter()
         k = self.steps_per_dispatch
-        bucket = self.policy.bucket_for(pending[0].need_len)
+        # the policy's top pick sizes the dispatch bucket (FIFO: queue
+        # head — unchanged; priority/EDF: the most urgent request)
+        head = self.admission.peek(pending, self._now())
+        bucket = self.policy.bucket_for(head.need_len)
         B, L = bucket.batch, bucket.max_len
         exe = self.plan.serve_executable("masked_decode", batch=B, max_len=L,
                                          steps_per_dispatch=k)
@@ -356,6 +409,25 @@ class ContinuousScheduler:
                 lane("start", start),
                 lane("active", active),
                 lane("fresh", fresh))
+            if self.on_tokens is not None:
+                # streaming: fetch this micro-run's block at the boundary
+                # and hand each live request its newly GENERATED tokens
+                # (prompt-echo steps are not part of any stream). The
+                # fetched array replaces the device block in `outs`, so
+                # drain-time assembly pays no second transfer.
+                toks = np.asarray(jax.device_get(toks))
+                deltas: Dict[str, List[int]] = {}
+                for b, slot in enumerate(slots):
+                    if slot is None:
+                        continue
+                    first = slot.start + len(slot.req.prompt) - 1
+                    lo = max(pos, first)
+                    hi = min(pos + k - 1, slot.end_step)
+                    if lo <= hi:
+                        deltas[slot.req.request_id] = [
+                            int(t) for t in toks[lo - pos:hi - pos + 1, b]]
+                if deltas:
+                    self.on_tokens(deltas)
             outs.append(toks)
             self.micro_runs += 1
             self.steps += k
@@ -416,8 +488,10 @@ class ContinuousScheduler:
             "micro_runs": self.micro_runs,
             "steps_per_dispatch": self.steps_per_dispatch,
             "steps": self.steps,
+            "policy": self.admission.name,
             "admissions": self.admissions,
             "cancellations": self.cancellations,
+            "sheds": self.sheds,
             "slot_steps": self.slot_steps,
             "idle_slot_steps": self.idle_slot_steps,
             "busy_slot_fraction": round(busy / self.slot_steps, 4)

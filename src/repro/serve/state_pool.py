@@ -37,6 +37,8 @@ class _BucketPool:
     created: int = 0
     reused: int = 0
     in_use: int = 0
+    slot_resets: int = 0     # host-side per-slot wipes (cancellation path)
+    slots_wiped: int = 0     # lanes zeroed across those wipes
 
 
 class StatePool:
@@ -121,6 +123,9 @@ class StatePool:
             self._slot_reset_fns[bucket] = fn
         with self._lock:
             self.slot_resets += 1
+            pool = self._pool(bucket)
+            pool.slot_resets += 1
+            pool.slots_wiped += int(sum(bool(m) for m in slot_mask))
         return fn(state, jnp.asarray(slot_mask, jnp.bool_))
 
     def release(self, batch: int, max_len: int, state) -> None:
@@ -138,6 +143,8 @@ class StatePool:
                     "reused": p.reused,
                     "in_use": p.in_use,
                     "free": len(p.free),
+                    "slot_resets": p.slot_resets,
+                    "slots_wiped": p.slots_wiped,
                 }
                 for (b, m), p in sorted(self._pools.items())
             }

@@ -1,0 +1,169 @@
+"""Host-level stand-ins for driving the REAL continuous scheduler.
+
+Shared by ``test_scheduler.py`` (slot/admission invariants), the policy
+property suite (``test_policies.py``), and any future host-level serving
+test. The scheduler under test is the production
+:class:`~repro.serve.scheduler.ContinuousScheduler`; only the executable
+and the state pool are faked, so every invariant checked here is a fact
+about the shipped scheduling code, not about a model.
+
+The fake executable emits token ``pos + i + 1`` on every active
+lane-step, which makes result slices *positional receipts*: request r
+admitted at ``start`` must receive exactly
+``[start+len(prompt), ..., start+len(prompt)+n-1]`` — any slot overlap,
+mis-slice, or double-completion corrupts the receipt.
+"""
+
+from __future__ import annotations
+
+import collections
+import types
+
+import numpy as np
+
+from repro.serve import Bucket, BucketPolicy, DecodeRequest
+from repro.serve.scheduler import ContinuousScheduler
+
+
+class HostExe:
+    """Fake masked-decode executable: positional-receipt tokens."""
+
+    def __init__(self):
+        self.bundle = types.SimpleNamespace(in_shardings=(None,) * 8)
+        self.calls = 0
+
+    def compiled(self, params, state, feed, prev, pos, start, active,
+                 fresh):
+        self.calls += 1
+        active = np.asarray(active)
+        k, B = active.shape
+        base = int(pos)
+        toks = (np.arange(base + 1, base + k + 1, dtype=np.int32)[:, None]
+                * active)
+        return toks, toks[-1], state
+
+
+class HostPlan:
+    """Plan stand-in: one HostExe per (batch, max_len, k)."""
+
+    def __init__(self):
+        self.exes = {}
+
+    def serve_executable(self, kind, *, batch, max_len,
+                         steps_per_dispatch=1, **kw):
+        assert kind == "masked_decode"
+        key = (batch, max_len, steps_per_dispatch)
+        if key not in self.exes:
+            self.exes[key] = HostExe()
+        return self.exes[key]
+
+
+class NullPool:
+    """State pool stand-in that only counts per-slot wipes."""
+
+    def __init__(self):
+        self.slot_resets = 0
+
+    def acquire(self, batch, max_len):
+        return {}
+
+    def release(self, batch, max_len, state):
+        pass
+
+    def reset_slots(self, batch, max_len, state, slot_mask):
+        self.slot_resets += 1
+        return state
+
+
+def make_host_scheduler(batch, max_len=64, k=1, admission=None,
+                        clock=None) -> ContinuousScheduler:
+    """A real scheduler over the host fakes, ready to ``run()``."""
+    policy = BucketPolicy([Bucket(max_len, batch)])
+    return ContinuousScheduler(HostPlan(), policy, NullPool(),
+                               steps_per_dispatch=k, admission=admission,
+                               clock=clock)
+
+
+def expected_receipt(start, plen, n):
+    first = start + plen - 1
+    return list(range(first + 1, first + 1 + n))
+
+
+def check_invariants(sched, reqs, results, k, canceled=(), shed=()):
+    """Slot non-overlap + conservation + positional receipts + gap <= k.
+
+    ``canceled``/``shed`` ids must complete zero times; every other
+    submitted id exactly once, with exactly ``max_new_tokens`` tokens
+    whose values prove which steps its slot actually held.
+    """
+    canceled, shed = set(canceled), set(shed)
+    assert set(results) == ({r.request_id for r in reqs}
+                            - canceled - shed)
+    by_id = {r.request_id: r for r in reqs}
+    admit_at = {}
+    for e in sched.events:
+        if e.kind == "admit":
+            admit_at[e.request_id] = e.step
+    for rid in shed:
+        assert rid not in admit_at, f"shed id {rid} was admitted"
+    for rid, res in results.items():
+        req = by_id[rid]
+        assert len(res.tokens) == req.max_new_tokens
+        # positional receipt: the slot held exactly these steps
+        assert res.tokens == expected_receipt(
+            admit_at[rid], len(req.prompt), req.max_new_tokens), rid
+
+    # slot non-overlap: per slot, the event stream alternates
+    # admit -> (free | cancel) -> admit -> ...  ("shed" never holds one)
+    occupancy = collections.defaultdict(lambda: None)
+    for e in sched.events:
+        if e.kind == "shed":
+            continue
+        if e.kind == "admit":
+            assert occupancy[e.slot] is None, (
+                f"slot {e.slot} double-admitted at {e.step}")
+            occupancy[e.slot] = e.request_id
+        else:
+            assert occupancy[e.slot] == e.request_id, (
+                f"slot {e.slot} freed by non-tenant at {e.step}")
+            occupancy[e.slot] = None
+
+    # refill gap bounded by the micro-run length
+    if sched.refills:
+        assert 1 <= sched.max_refill_gap <= k
+
+
+def run_host_trace(lengths, k, batch, max_len=64, cancel_at=None,
+                   admission=None, reqs=None):
+    """Drive the real scheduler over the host fakes; returns
+    ``(sched, reqs, results, canceled)``.
+
+    ``lengths`` is a list of ``(prompt_len, max_new_tokens)`` pairs used
+    to synthesize requests ``h0, h1, ...`` — or pass ``reqs`` to supply
+    your own (priorities, tenants, deadlines). ``cancel_at=(boundary,
+    idx)`` cancels the idx-th request from the ``on_boundary`` hook at
+    the first boundary >= ``boundary`` where it is in flight.
+    """
+    sched = make_host_scheduler(batch, max_len=max_len, k=k,
+                                admission=admission)
+    if reqs is None:
+        reqs = [DecodeRequest(
+            f"h{i}", [1 + (i + j) % 7 for j in range(plen)],
+            max_new_tokens=n)
+            for i, (plen, n) in enumerate(lengths)]
+    canceled = []
+    if cancel_at is not None:
+        boundary, idx = cancel_at
+        rid = reqs[idx % len(reqs)].request_id
+
+        def hook(pos, slots):
+            if pos >= boundary and rid not in canceled and any(
+                    s is not None and s.req.request_id == rid
+                    for s in slots):
+                sched.cancel(rid)
+                canceled.append(rid)
+
+        sched.on_boundary = hook
+    pending = collections.deque(reqs)
+    results = sched.run(pending, None, {})
+    return sched, reqs, results, canceled

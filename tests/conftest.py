@@ -11,6 +11,18 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import pytest  # noqa: E402
 
+# One seed for every deterministic fixture in the suite. Override with
+# REPRO_TEST_SEED to shake out accidental seed-coupling (the contract
+# tests — parity, gap-robust prompts — are documented to hold for ANY
+# seed; a failure under a different seed is a real finding, not flake).
+SEED = int(os.environ.get("REPRO_TEST_SEED", "0"))
+
+
+@pytest.fixture(scope="session")
+def test_seed() -> int:
+    """The suite-wide deterministic seed (REPRO_TEST_SEED to override)."""
+    return SEED
+
 
 def hypothesis_or_skip_stub():
     """Return (given, settings, st), real or stubbed.

@@ -32,12 +32,10 @@ The acceptance properties this file pins down:
   every submitted id completes exactly once (canceled ids: zero times).
 """
 
-import collections
-import types
-
 import jax
 import numpy as np
 import pytest
+from _serve_stubs import check_invariants, run_host_trace
 from conftest import hypothesis_or_skip_stub
 
 from repro.configs import reduced_config
@@ -45,7 +43,6 @@ from repro.dist.sharding import init_params
 from repro.launch.mesh import make_debug_mesh
 from repro.models import build_model
 from repro.serve import Bucket, BucketPolicy, DecodeRequest, ServeBatcher
-from repro.serve.scheduler import ContinuousScheduler
 
 given, settings, st = hypothesis_or_skip_stub()
 
@@ -61,8 +58,8 @@ def mesh():
 
 
 @pytest.fixture(scope="module")
-def params(cfg):
-    return init_params(jax.random.PRNGKey(0),
+def params(cfg, test_seed):
+    return init_params(jax.random.PRNGKey(test_seed),
                        build_model(cfg).param_specs())
 
 
@@ -161,10 +158,10 @@ _PARITY_TRACE = [
 
 
 @pytest.fixture(scope="module")
-def hybrid_setup():
+def hybrid_setup(test_seed):
     """One zamba2 (cfg, params) build shared by the whole k matrix."""
     hcfg = reduced_config("zamba2_2_7b")
-    return hcfg, init_params(jax.random.PRNGKey(0),
+    return hcfg, init_params(jax.random.PRNGKey(test_seed),
                              build_model(hcfg).param_specs())
 
 
@@ -394,6 +391,56 @@ def test_cancel_inflight_slot_reused_and_state_wiped(cfg, mesh, params):
     assert b.pool.slot_resets >= 1          # host-side wipe actually ran
 
 
+def test_cancel_mid_chunked_prefill_wipes_and_reuses(cfg, mesh, params):
+    """Cancel a long-prompt request while its prompt is still being
+    chunk-fed (``slot.fed < len(prompt)``, k=4): the boundary cancel must
+    wipe the partially-prefilled KV lanes through
+    ``StatePool.reset_slots``, and the successor admitted into that slot
+    must get its own ``start`` lane — decoding token-for-token what it
+    decodes in a run where the canceled request never existed."""
+    long_prompt = [1 + (i * 7) % 61 for i in range(24)]   # 6 k=4 chunks
+    with mesh:
+        ref_b = ServeBatcher(cfg, mesh, schedule="continuous",
+                             policy=BucketPolicy([Bucket(128, 2)]),
+                             steps_per_dispatch=4).load_params(params)
+        ref_b.submit(DecodeRequest("late", [7, 11, 13], max_new_tokens=4))
+        ref = ref_b.run()["late"].tokens
+
+        b = ServeBatcher(cfg, mesh, schedule="continuous",
+                         policy=BucketPolicy([Bucket(128, 2)]),
+                         steps_per_dispatch=4).load_params(params)
+        b.submit(DecodeRequest("victim", long_prompt, max_new_tokens=8))
+        b.submit(DecodeRequest("rider", [3, 4], max_new_tokens=40))
+        b.submit(DecodeRequest("late", [7, 11, 13], max_new_tokens=4))
+        sched = b.scheduler
+        fed_at_cancel = []
+
+        def hook(pos, slots):
+            if pos == 8 and not fed_at_cancel:
+                victim_slot, = [s for s in slots if s is not None
+                                and s.req.request_id == "victim"]
+                fed_at_cancel.append(victim_slot.fed)
+                assert b.cancel("victim") is True
+
+        sched.on_boundary = hook
+        out = b.run()
+
+    # the cancel really landed mid-prefill, not after it
+    assert fed_at_cancel and 0 < fed_at_cancel[0] < len(long_prompt)
+    assert set(out) == {"rider", "late"}
+    assert sched.cancellations == 1
+    assert b.pool.slot_resets >= 1          # partial prefill wiped
+    cancel_ev, = [e for e in sched.events if e.kind == "cancel"]
+    admit_late, = [e for e in sched.events
+                   if e.kind == "admit" and e.request_id == "late"]
+    # successor takes the canceled slot at the SAME boundary ...
+    assert admit_late.step == cancel_ev.step == 8
+    assert admit_late.slot == cancel_ev.slot
+    # ... with a clean state and its own start lane
+    assert out["late"].tokens == ref
+    assert len(out["rider"].tokens) == 40   # survivor unharmed
+
+
 def test_cancel_racing_completion_drops_tokens_and_frees_id(cfg, mesh,
                                                             params):
     """A cancel landing AFTER its request already finished (but before
@@ -492,122 +539,14 @@ def test_fifo_batcher_rejects_unknown_schedule(cfg, mesh):
 # ---------------------------------------------------------------------------
 #
 # The invariants below are pure scheduling facts — they hold for any
-# model, so they are checked against a fake masked-decode executable
-# that runs entirely on the host. The fake emits token ``pos + i + 1``
-# on every active lane-step, which makes the result slices *positional
-# receipts*: request r admitted at ``start`` must receive exactly
-# ``[start+len(prompt), ..., start+len(prompt)+n-1]`` — any slot
-# overlap, mis-slice, or double-completion corrupts the receipt.
+# model, so they are checked against the host-level fakes shared in
+# ``_serve_stubs`` (positional-receipt tokens: any slot overlap,
+# mis-slice, or double-completion corrupts a request's receipt). The
+# admission-policy properties live in ``test_policies.py`` on the same
+# stand-ins.
 
-
-class _HostExe:
-    def __init__(self):
-        self.bundle = types.SimpleNamespace(in_shardings=(None,) * 8)
-        self.calls = 0
-
-    def compiled(self, params, state, feed, prev, pos, start, active, fresh):
-        self.calls += 1
-        active = np.asarray(active)
-        k, B = active.shape
-        base = int(pos)
-        toks = (np.arange(base + 1, base + k + 1, dtype=np.int32)[:, None]
-                * active)
-        return toks, toks[-1], state
-
-
-class _HostPlan:
-    def __init__(self):
-        self.exes = {}
-
-    def serve_executable(self, kind, *, batch, max_len,
-                         steps_per_dispatch=1, **kw):
-        assert kind == "masked_decode"
-        key = (batch, max_len, steps_per_dispatch)
-        if key not in self.exes:
-            self.exes[key] = _HostExe()
-        return self.exes[key]
-
-
-class _NullPool:
-    def __init__(self):
-        self.slot_resets = 0
-
-    def acquire(self, batch, max_len):
-        return {}
-
-    def release(self, batch, max_len, state):
-        pass
-
-    def reset_slots(self, batch, max_len, state, slot_mask):
-        self.slot_resets += 1
-        return state
-
-
-def _expected_receipt(start, plen, n):
-    first = start + plen - 1
-    return list(range(first + 1, first + 1 + n))
-
-
-def _check_invariants(sched, reqs, results, k, canceled=()):
-    canceled = set(canceled)
-    # conservation: every non-canceled id completes exactly once, with
-    # exactly max_new_tokens tokens; canceled ids never complete
-    assert set(results) == {r.request_id for r in reqs} - canceled
-    by_id = {r.request_id: r for r in reqs}
-    admit_at = {}
-    for e in sched.events:
-        if e.kind == "admit":
-            admit_at[e.request_id] = e.step
-    for rid, res in results.items():
-        req = by_id[rid]
-        assert len(res.tokens) == req.max_new_tokens
-        # positional receipt: the slot held exactly these steps
-        assert res.tokens == _expected_receipt(
-            admit_at[rid], len(req.prompt), req.max_new_tokens), rid
-
-    # slot non-overlap: per slot, the event stream alternates
-    # admit -> (free | cancel) -> admit -> ...
-    occupancy = collections.defaultdict(lambda: None)
-    for e in sched.events:
-        if e.kind == "admit":
-            assert occupancy[e.slot] is None, (
-                f"slot {e.slot} double-admitted at {e.step}")
-            occupancy[e.slot] = e.request_id
-        else:
-            assert occupancy[e.slot] == e.request_id, (
-                f"slot {e.slot} freed by non-tenant at {e.step}")
-            occupancy[e.slot] = None
-
-    # refill gap bounded by the micro-run length
-    if sched.refills:
-        assert 1 <= sched.max_refill_gap <= k
-
-
-def _run_host_trace(lengths, k, batch, max_len=64, cancel_at=None):
-    """Drive the real scheduler over a host-level fake executable."""
-    policy = BucketPolicy([Bucket(max_len, batch)])
-    pool = _NullPool()
-    sched = ContinuousScheduler(_HostPlan(), policy, pool,
-                                steps_per_dispatch=k)
-    reqs = [DecodeRequest(f"h{i}", [1 + (i + j) % 7 for j in range(plen)],
-                          max_new_tokens=n)
-            for i, (plen, n) in enumerate(lengths)]
-    canceled = []
-    if cancel_at is not None:
-        boundary, idx = cancel_at
-        rid = reqs[idx % len(reqs)].request_id
-
-        def hook(pos, slots):
-            if pos >= boundary and rid not in canceled and any(
-                    s is not None and s.req.request_id == rid
-                    for s in slots):
-                sched.cancel(rid)
-                canceled.append(rid)
-
-        sched.on_boundary = hook
-    pending = collections.deque(reqs)
-    results = sched.run(pending, None, {})
-    return sched, reqs, results, canceled
+_check_invariants = check_invariants
+_run_host_trace = run_host_trace
 
 
 @pytest.mark.parametrize("seed", range(8))

@@ -42,8 +42,8 @@ def mesh():
 
 
 @pytest.fixture(scope="module")
-def params(cfg):
-    return init_params(jax.random.PRNGKey(0),
+def params(cfg, test_seed):
+    return init_params(jax.random.PRNGKey(test_seed),
                        build_model(cfg).param_specs())
 
 
@@ -321,7 +321,7 @@ def test_batched_decode_matches_unbatched(cfg, mesh, params, batcher):
 # ---------------------------------------------------------------------------
 
 
-def test_quantized_decode_matches_float_argmax(mesh):
+def test_quantized_decode_matches_float_argmax(mesh, test_seed):
     """On the FULL debug config (the one ``--debug --quantized`` serves),
     quantized decode — int8 LM head AND the a16w8 MLP down-projection with
     plan-calibrated shifts — must reproduce the float greedy tokens for 4
@@ -329,7 +329,7 @@ def test_quantized_decode_matches_float_argmax(mesh):
     clears the ~0.02 int8-weight noise floor; gaps below it may flip (the
     int8 contract, not a bug)."""
     full = reduced_config("yi_6b")
-    full_params = init_params(jax.random.PRNGKey(0),
+    full_params = init_params(jax.random.PRNGKey(test_seed),
                               build_model(full).param_specs())
     prompts = [[7, 3], [2, 3, 4], [6, 2, 8], [2, 4, 8, 16]]
     with mesh:
@@ -388,9 +388,11 @@ def test_state_pool_reuse_is_per_bucket(cfg, mesh):
     pool.acquire(2, 64)                    # released bucket: reused
     pool.acquire(2, 128)
     assert pool.stats()["2x64"] == {
-        "created": 1, "reused": 1, "in_use": 1, "free": 0}
+        "created": 1, "reused": 1, "in_use": 1, "free": 0,
+        "slot_resets": 0, "slots_wiped": 0}
     assert pool.stats()["2x128"] == {
-        "created": 1, "reused": 1, "in_use": 1, "free": 0}
+        "created": 1, "reused": 1, "in_use": 1, "free": 0,
+        "slot_resets": 0, "slots_wiped": 0}
 
 
 def test_state_pool_reset_slots_no_leak(cfg, mesh):
