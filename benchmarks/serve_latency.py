@@ -17,6 +17,18 @@ fractions, and p50/p99 per-slot idle time. ``k_sweep`` summarizes
 tokens/s per k; ``speedup_k4_vs_k1`` is the micro-run amortization
 headline (CI asserts k=4 >= k=1).
 
+The ``paged`` section races the dense continuous scheduler against the
+paged KV cache (``paged=True``) on one shared-prefix trace — every
+request opens with the same 16-token system prompt — and reports the
+memory headline: **concurrent requests per HBM byte**, i.e. dense slab
+bytes over the paged pool's peak page footprint for the same live mix
+(CI asserts the ratio >= 1), plus the prefill-skip rate from prefix
+reuse (CI asserts > 0), paged-vs-dense tokens/sec, and zero
+post-warmup lowerings. Paged token streams are asserted identical per
+request id to the dense FIFO ground truth — paging runs every request
+at local positions 0..n exactly like a fresh fifo slot, so it is a
+memory-layout change, not a model change (see docs/memory_model.md).
+
 The ``traffic`` section replays ONE seeded Poisson trace (heavy-tailed
 lengths, priority classes, per-request deadlines — ``repro.serve.
 traffic``) through each admission policy in **virtual time**: arrivals
@@ -176,6 +188,140 @@ def measure_churn(waves: int = 3) -> dict:
     out["speedup_k8_vs_k1"] = ratio(
         out["continuous_k8"]["tokens_per_second"],
         out["continuous"]["tokens_per_second"])
+    return out
+
+
+# paged section: every request opens with the same one-page system
+# prompt, so prefix reuse kicks in from the second admission on; the
+# tails diverge so the first private page is a genuine COW fork
+PAGED_SYSTEM = tuple(((7 * j) % 50) + 1 for j in range(16))
+PAGED_REQUESTS = 16                 # per wave
+PAGED_K = 4                         # steps_per_dispatch for both racers
+
+
+def paged_requests(tag: str, n: int = PAGED_REQUESTS):
+    # tail values spread across the vocab so every decode step's top-2
+    # logit gap clears float rounding noise (paged RoPE runs at LOCAL
+    # positions — equal scores, not bitwise-equal floats), keeping the
+    # dense-vs-paged token assert tie-free like the scheduler tests
+    reqs = []
+    for i in range(n):
+        tail = [2 + (11 * i + 17 * j) % 50 for j in range(2 + i % 3)]
+        reqs.append(DecodeRequest(f"{tag}-{i}", list(PAGED_SYSTEM) + tail,
+                                  max_new_tokens=8))
+    return reqs
+
+
+def _kv_slab_bytes(model, batch: int, max_len: int) -> tuple:
+    """(dense KV slab bytes for one bucket, bytes of ONE page)."""
+    import numpy as np
+
+    from repro.models.base import PAGED_STATE_KEYS, paged_state_specs
+
+    def nbytes(spec):
+        n = 1
+        for d in spec.shape:
+            n *= d
+        return n * np.dtype(spec.dtype).itemsize
+
+    sspecs = model.decode_state_specs(batch, max_len)
+    page_size = 16
+    one_page = paged_state_specs(sspecs, 1, page_size)
+    dense = sum(nbytes(s) for k, s in sspecs.items()
+                if k in PAGED_STATE_KEYS)
+    page = sum(nbytes(s) for k, s in one_page.items()
+               if k in PAGED_STATE_KEYS)
+    return dense, page
+
+
+# (label, batcher kwargs): fifo is the dense GROUND TRUTH — paged runs
+# every request at local positions 0..n exactly like a fresh fifo slot,
+# so its tokens must match fifo bit-for-bit even on tie-prone prompts;
+# dense continuous evaluates RoPE at offset absolute positions (equal
+# scores, different floats), so it only gets the count-parity gate here
+# and keeps its exact-parity gate on the curated scheduler-test traces.
+PAGED_CONFIGS = (
+    ("fifo", {}),
+    ("dense", dict(schedule="continuous", steps_per_dispatch=PAGED_K)),
+    ("paged", dict(schedule="continuous", steps_per_dispatch=PAGED_K,
+                   paged=True)),
+)
+
+
+def measure_paged(waves: int = 3) -> dict:
+    """Race fifo / dense-continuous / paged on one shared-prefix trace."""
+    cfg = reduced_config(ARCH).with_(n_layers=2, vocab=64)
+    policy = BucketPolicy([Bucket(CHURN_MAX_LEN, CHURN_BATCH)])
+    out = {}
+    token_traces = {}
+    for label, kw in PAGED_CONFIGS:
+        plan = build_plan(cfg, None, mesh_spec=MeshSpec.debug(1, 1))
+        with plan.activate():
+            b = plan.make_batcher(policy=policy, **kw)
+            b.init_demo_params(seed=0)
+            trace = {}
+            for r in paged_requests("cold"):
+                b.submit(r)
+            trace.update({rid: r.tokens
+                          for rid, r in b.run().items()})
+            warm_cache = dict(b.cache.stats())
+            b.metrics = {}
+            t0 = time.perf_counter()
+            tokens = 0
+            for w in range(waves):
+                for r in paged_requests(f"warm{w}"):
+                    b.submit(r)
+                res = b.run()
+                tokens += sum(len(r.tokens) for r in res.values())
+                trace.update({rid: r.tokens for rid, r in res.items()})
+            dt = time.perf_counter() - t0
+        after = b.cache.stats()
+        token_traces[label] = trace
+        dense_bytes, page_bytes = _kv_slab_bytes(
+            b.model, CHURN_BATCH, CHURN_MAX_LEN)
+        entry = {
+            "tokens": tokens,
+            "seconds": round(dt, 4),
+            "tokens_per_second": round(tokens / dt, 2) if dt else 0.0,
+            "new_lowerings_after_warmup":
+                after["lowerings"] - warm_cache["lowerings"],
+            "dense_kv_slab_bytes": dense_bytes,
+        }
+        if label == "paged":
+            p = b.stats()["paged"]
+            entry["allocator"] = p
+            entry["page_bytes"] = page_bytes
+            # the pool bytes this mix ever actually touched — the paged
+            # analogue of the dense slab (scratch pages included)
+            entry["peak_kv_bytes"] = p["peak_pages"] * page_bytes
+            entry["requests_per_kv_gib"] = round(
+                CHURN_BATCH * 2**30 / entry["peak_kv_bytes"], 2)
+        else:
+            entry["peak_kv_bytes"] = dense_bytes
+            entry["requests_per_kv_gib"] = round(
+                CHURN_BATCH * 2**30 / dense_bytes, 2)
+        out[label] = entry
+    assert token_traces["paged"] == token_traces["fifo"], (
+        "paged tokens diverged from the dense fifo ground truth: paging "
+        "must be a pure memory-layout change (see docs/memory_model.md)")
+    counts = {lbl: sorted((rid, len(t)) for rid, t in tr.items())
+              for lbl, tr in token_traces.items()}
+    assert counts["dense"] == counts["fifo"], (
+        "dense continuous generated a different token count than fifo "
+        "on the same trace")
+    out["tokens_match"] = True
+    out["speedup_paged_vs_dense"] = round(
+        out["paged"]["tokens_per_second"]
+        / out["dense"]["tokens_per_second"], 3) \
+        if out["dense"]["tokens_per_second"] else 0.0
+    # headline: concurrent requests per HBM byte, paged over dense —
+    # both serve CHURN_BATCH concurrent requests, so the ratio reduces
+    # to dense slab bytes over the paged pool's peak footprint
+    out["hbm_capacity_ratio"] = round(
+        out["paged"]["requests_per_kv_gib"]
+        / out["dense"]["requests_per_kv_gib"], 3)
+    out["prefill_skip_rate"] = \
+        out["paged"]["allocator"]["prefill_skip_rate"]
     return out
 
 
@@ -416,6 +562,7 @@ def measure(waves: int = WAVES, tokens: int = TOKENS,
         "buckets": buckets,
         "pool": stats["pool"],
         "churn": measure_churn(),
+        "paged": measure_paged(),
     }
     if traffic:
         out["traffic"] = measure_traffic()
@@ -436,6 +583,30 @@ def run():
                         f"hits {data['warm_cache']['hits']}"),
         })
     return rows
+
+
+def _report_paged(paged: dict) -> None:
+    """Print + gate the paged section (shared by --only paged)."""
+    for label, _ in PAGED_CONFIGS:
+        p = paged[label]
+        print(f"paged/{label}: {p['tokens_per_second']} tok/s, "
+              f"{p['peak_kv_bytes']} peak KV bytes, "
+              f"{p['requests_per_kv_gib']} requests/KV-GiB")
+        assert p["new_lowerings_after_warmup"] == 0, \
+            f"paged/{label} lowered after warmup"
+    a = paged["paged"]["allocator"]
+    print(f"paged: skip rate {paged['prefill_skip_rate']} "
+          f"({a['skipped_prefill_tokens']} prompt tokens skipped, "
+          f"{a['prefix_hits']} prefix hits), HBM capacity ratio "
+          f"{paged['hbm_capacity_ratio']}x (gate: >= 1), "
+          f"speedup {paged['speedup_paged_vs_dense']}x")
+    assert paged["tokens_match"]
+    assert paged["prefill_skip_rate"] > 0, (
+        "shared-prefix trace produced no prefill skips — the prefix "
+        "cache is not publishing or not matching")
+    assert paged["hbm_capacity_ratio"] >= 1, (
+        "paged KV held MORE concurrent requests' bytes than the dense "
+        "slabs on a shared-prefix mix — paging lost its reason to exist")
 
 
 def _report_traffic(traffic: dict) -> None:
@@ -468,9 +639,11 @@ def main():
     ap.add_argument("--out", default="BENCH_serve.json")
     ap.add_argument("--waves", type=int, default=WAVES)
     ap.add_argument("--tokens", type=int, default=TOKENS)
-    ap.add_argument("--only", default="all", choices=["all", "traffic"],
+    ap.add_argument("--only", default="all",
+                    choices=["all", "traffic", "paged"],
                     help="'traffic' runs just the admission-policy / "
-                         "async replay section (the CI traffic-smoke job)")
+                         "async replay section (the CI traffic-smoke job); "
+                         "'paged' just the paged-vs-dense KV race")
     args = ap.parse_args()
     if args.only == "traffic":
         data = {"traffic": measure_traffic()}
@@ -479,6 +652,14 @@ def main():
             f.write("\n")
         _report_traffic(data["traffic"])
         print(f"wrote {args.out} (traffic section only)")
+        return
+    if args.only == "paged":
+        data = {"paged": measure_paged()}
+        with open(args.out, "w") as f:
+            json.dump(data, f, indent=2, sort_keys=True)
+            f.write("\n")
+        _report_paged(data["paged"])
+        print(f"wrote {args.out} (paged section only)")
         return
     data = measure(waves=args.waves, tokens=args.tokens)
     with open(args.out, "w") as f:
@@ -503,6 +684,7 @@ def main():
         if schedule == "continuous":
             assert churn[label]["new_lowerings_after_warmup"] == 0, \
                 f"{label} scheduler lowered after warmup under churn"
+    _report_paged(data["paged"])
     _report_traffic(data["traffic"])
     print(f"wrote {args.out} (cache hits={hits}, "
           f"compiles={data['warm_cache']['compiles']})")

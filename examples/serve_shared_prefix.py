@@ -1,0 +1,85 @@
+"""Shared-prefix serving through the paged KV cache.
+
+The deployment shape this demonstrates: many concurrent requests that
+all open with the same system prompt. Under ``paged=True`` the batcher
+swaps its dense per-bucket KV slabs for one shared physical page pool
+(``docs/memory_model.md``): the first request to feed a full page of
+prompt publishes it under a content hash, and every later request whose
+prompt starts with the same tokens maps that page read-only into its own
+page table — skipping prefill for the shared span entirely. The first
+divergent page is a fresh private allocation (copy-on-write by
+allocation), so token streams stay bit-identical to dense serving.
+
+Quantized serving composes with this (``build_plan(quantized=True)``);
+it is orthogonal to the memory layout and not shown here.
+
+    PYTHONPATH=src python examples/serve_shared_prefix.py [--waves 3] [--requests 8]
+"""
+
+import argparse
+import time
+
+from repro.configs import reduced_config
+from repro.plan import MeshSpec, build_plan
+from repro.serve import Bucket, BucketPolicy, DecodeRequest
+
+# one full 16-token page of "system prompt" shared by every request
+SYSTEM_PROMPT = [1 + (5 * j) % 50 for j in range(16)]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b")
+    ap.add_argument("--waves", type=int, default=3)
+    ap.add_argument("--requests", type=int, default=8,
+                    help="requests per wave, all sharing SYSTEM_PROMPT")
+    ap.add_argument("--tokens", type=int, default=6)
+    args = ap.parse_args()
+
+    cfg = reduced_config(args.arch)     # the registry resolves aliases
+    plan = build_plan(cfg, None, mesh_spec=MeshSpec.debug(1, 1))
+
+    # paged=True auto-sizes the page pool from the bucket policy; pass
+    # (page_count, page_size) instead to model a real HBM budget
+    batcher = plan.make_batcher(policy=BucketPolicy([Bucket(64, 4)]),
+                                schedule="continuous",
+                                steps_per_dispatch=4, paged=True)
+    with plan.activate():
+        batcher.init_demo_params(seed=0)
+    print(f"page pool: {batcher.paged[0]} pages x "
+          f"{batcher.paged[1]} tokens")
+
+    with plan.activate():
+        for wave in range(args.waves):
+            for i in range(args.requests):
+                tail = [2 + (7 * i + 3 * j) % 50 for j in range(2 + i % 3)]
+                batcher.submit(DecodeRequest(
+                    f"w{wave}-{i}", SYSTEM_PROMPT + tail,
+                    max_new_tokens=args.tokens))
+            t0 = time.perf_counter()
+            results = batcher.run()
+            dt = time.perf_counter() - t0
+            p = batcher.stats()["paged"]
+            sample = results[sorted(results)[0]]
+            print(f"wave {wave}: {len(results)} requests in {dt*1e3:.0f} "
+                  f"ms, sample {sample.request_id} -> "
+                  f"{sample.tokens[:6]}; pages in use "
+                  f"{p['pages_in_use']}/{p['page_count']} "
+                  f"(peak {p['peak_pages']}), prefix hits "
+                  f"{p['prefix_hits']}, skip rate "
+                  f"{p['prefill_skip_rate']:.3f}")
+
+    p = batcher.stats()["paged"]
+    skipped = p["skipped_prefill_tokens"]
+    print(f"total: {p['prefix_hits']} of {args.waves * args.requests} "
+          f"admissions reused the shared prefix, skipping {skipped} "
+          f"prompt tokens of prefill ({p['prefill_skip_rate']:.1%} of "
+          "all prompt tokens)")
+    c = plan.stats()
+    print(f"cache: entries={c['entries']} hits={c['hits']} "
+          f"lowerings={c['lowerings']} (zero hot-path lowerings after "
+          "wave 0)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,143 @@
+#!/usr/bin/env python3
+"""Doc-integrity gate (CI lint job): keep the docs from drifting.
+
+Checks, over README.md and docs/*.md:
+
+1. every intra-repo markdown link resolves to a file or directory that
+   exists (external http(s)/mailto links are ignored);
+2. every ``#anchor`` fragment on a markdown target matches a real
+   heading in that file, using GitHub's slug rules (lowercase, drop
+   punctuation, spaces become hyphens, duplicates get ``-1``/``-2``…);
+3. every ```python fenced block in docs/ is valid Python — it must
+   survive ``compile(src, file, "exec")``. Docs examples that cannot
+   even parse are worse than no examples.
+
+Stdlib only, no repo imports; runs from any cwd. Exit code 1 and a
+per-problem listing on failure.
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+from typing import Dict, Iterator, List, Tuple
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+LINK_RE = re.compile(r"!?\[([^\]\[]*)\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(r"^\s*(```+|~~~+)\s*([A-Za-z0-9_+-]*)\s*$")
+HEADING_RE = re.compile(r"^(#{1,6})\s+(.*?)\s*#*\s*$")
+# GitHub keeps word chars, spaces and hyphens; everything else vanishes
+SLUG_DROP_RE = re.compile(r"[^\w\- ]")
+
+
+def doc_files() -> List[pathlib.Path]:
+    files = [REPO / "README.md"]
+    files += sorted((REPO / "docs").glob("*.md"))
+    return [f for f in files if f.is_file()]
+
+
+def walk_lines(text: str) -> Iterator[Tuple[int, str, str]]:
+    """Yield (lineno, kind, payload): ``text`` lines outside fences, and
+    one ``("code:<lang>", block_src)`` entry per fenced block."""
+    fence, lang, buf, start = None, "", [], 0
+    for n, line in enumerate(text.splitlines(), 1):
+        m = FENCE_RE.match(line)
+        if fence is None:
+            if m:
+                fence, lang, buf, start = m.group(1), m.group(2).lower(), [], n
+            else:
+                yield n, "text", line
+        elif m and m.group(1)[0] == fence[0] and len(m.group(1)) >= len(fence):
+            yield start, f"code:{lang}", "\n".join(buf)
+            fence = None
+        else:
+            buf.append(line)
+    if fence is not None:  # unterminated fence: surface as a code block
+        yield start, f"code:{lang}", "\n".join(buf)
+
+
+def github_slug(heading: str) -> str:
+    text = re.sub(r"`([^`]*)`", r"\1", heading)        # unwrap code spans
+    text = LINK_RE.sub(lambda m: m.group(1), text)     # [text](url) -> text
+    return SLUG_DROP_RE.sub("", text.lower()).replace(" ", "-")
+
+
+def anchors_of(text: str) -> set:
+    slugs: Dict[str, int] = {}
+    out = set()
+    for _, kind, payload in walk_lines(text):
+        if kind != "text":
+            continue
+        m = HEADING_RE.match(payload)
+        if not m:
+            continue
+        slug = github_slug(m.group(2))
+        n = slugs.get(slug, 0)
+        slugs[slug] = n + 1
+        out.add(slug if n == 0 else f"{slug}-{n}")
+    return out
+
+
+def check() -> List[str]:
+    problems: List[str] = []
+    anchor_cache: Dict[pathlib.Path, set] = {}
+
+    def anchors(path: pathlib.Path) -> set:
+        if path not in anchor_cache:
+            anchor_cache[path] = anchors_of(path.read_text(encoding="utf-8"))
+        return anchor_cache[path]
+
+    for doc in doc_files():
+        rel = doc.relative_to(REPO)
+        text = doc.read_text(encoding="utf-8")
+        for lineno, kind, payload in walk_lines(text):
+            if kind == "code:python":
+                if rel.parts[0] != "docs":
+                    continue
+                try:
+                    compile(payload, f"{rel}:{lineno}", "exec")
+                except SyntaxError as e:
+                    problems.append(
+                        f"{rel}:{lineno}: python block does not compile: "
+                        f"{e.msg} (block line {e.lineno})")
+                continue
+            if kind != "text":
+                continue
+            for m in LINK_RE.finditer(payload):
+                target = m.group(2)
+                if target.startswith(("http://", "https://", "mailto:")):
+                    continue
+                path_part, _, frag = target.partition("#")
+                dest = doc if not path_part else (
+                    doc.parent / path_part).resolve()
+                if not dest.exists():
+                    problems.append(
+                        f"{rel}:{lineno}: broken link -> {target}")
+                    continue
+                if frag and dest.suffix == ".md":
+                    if frag.lower() not in anchors(dest):
+                        problems.append(
+                            f"{rel}:{lineno}: bad anchor -> {target} "
+                            f"(no heading slugs to '{frag}' in "
+                            f"{dest.relative_to(REPO)})")
+    return problems
+
+
+def main() -> int:
+    problems = check()
+    n_docs = len(doc_files())
+    if problems:
+        for p in problems:
+            print(p)
+        print(f"check_docs: {len(problems)} problem(s) across "
+              f"{n_docs} file(s)")
+        return 1
+    print(f"check_docs: OK ({n_docs} files: links, anchors, "
+          f"python blocks)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

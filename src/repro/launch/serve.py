@@ -47,6 +47,15 @@ Flags:
                (repro.serve.server.AsyncServeServer): concurrent
                submission, per-micro-run token streams, p50/p99 TTFT
                printed from the server's client-side stats
+  --paged      paged KV cache (needs --schedule continuous): one shared
+               physical page pool instead of dense per-bucket KV slabs,
+               with content-hashed shared-prefix reuse that skips
+               prefill for common prompt openings. Optionally takes the
+               page size in tokens (default 16); the pool is auto-sized
+               so paged mode is never less capable than dense. Prints
+               the allocator counters (pages in use, peak, prefix hits,
+               prefill-skip rate) after the waves. See
+               docs/memory_model.md.
 """
 
 from __future__ import annotations
@@ -73,7 +82,7 @@ def build_batcher(args) -> ServeBatcher:
     admission = make_policy(args.policy) if args.policy != "fifo" else None
     batcher = plan.make_batcher(policy=policy, schedule=args.schedule,
                                 steps_per_dispatch=args.steps_per_dispatch,
-                                admission=admission)
+                                admission=admission, paged=args.paged)
     with plan.activate():
         batcher.init_demo_params(seed=0)
     return batcher
@@ -83,7 +92,21 @@ def main():
     ap = argparse.ArgumentParser(
         description="Bucketed batch decode over AOT-cached executables "
                     "and resident KV/SSM state pools, wired by one "
-                    "ExecutionPlan.")
+                    "ExecutionPlan.",
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+        epilog="""\
+continuous-batching extras (all need --schedule continuous):
+  --steps-per-dispatch k   scan k masked steps per executable call
+  --policy priority|edf    boundary-time admission ordering / shedding
+  --stream                 asyncio streaming front-end with client TTFT
+  --paged [PAGE_SIZE]      paged KV cache with shared-prefix prefill
+                           skipping (docs/memory_model.md)
+
+examples:
+  %(prog)s --arch yi-6b --debug --schedule continuous \\
+      --steps-per-dispatch 4 --paged --tokens 8
+  %(prog)s --arch yi-6b --debug --schedule continuous \\
+      --policy edf --stream""")
     ap.add_argument("--arch", required=True,
                     help="architecture alias, e.g. yi-6b")
     ap.add_argument("--shape", default="decode_32k", choices=list(SHAPES),
@@ -117,6 +140,11 @@ def main():
     ap.add_argument("--stream", action="store_true",
                     help="drive the waves through the asyncio streaming "
                          "front-end (needs --schedule continuous)")
+    ap.add_argument("--paged", nargs="?", const=True, default=None,
+                    type=int, metavar="PAGE_SIZE",
+                    help="paged KV cache with shared-prefix reuse (needs "
+                         "--schedule continuous); optional page size in "
+                         "tokens, default 16")
     args = ap.parse_args()
     if args.tokens < 1:
         ap.error("--tokens must be >= 1")
@@ -130,6 +158,10 @@ def main():
         ap.error("--policy needs --schedule continuous")
     if args.stream and args.schedule != "continuous":
         ap.error("--stream needs --schedule continuous")
+    if args.paged is not None and args.schedule != "continuous":
+        ap.error("--paged needs --schedule continuous")
+    if args.paged is not None and args.paged is not True and args.paged < 1:
+        ap.error("--paged page size must be >= 1")
 
     batcher = build_batcher(args)
     batch = batcher.policy.buckets[0].batch
@@ -145,8 +177,13 @@ def main():
         deadline = (_time.monotonic() + 120.0
                     if args.policy == "edf" and args.stream else
                     1_000_000.0 if args.policy == "edf" else None)
+        # under --paged every request opens with the same one-page
+        # system prompt, so shared-prefix reuse is observable in the
+        # printed allocator counters from the second admission on
+        system = [1 + (j * 5) % 50 for j in range(16)] if args.paged else []
         return [DecodeRequest(
-            f"w{wave}r{i}", [1 + (i + j) % 7 for j in range(i % 3 + 2)],
+            f"w{wave}r{i}",
+            system + [1 + (i + j) % 7 for j in range(i % 3 + 2)],
             max_new_tokens=args.tokens, priority=i % 3,
             tenant=f"tenant{i % 2}", deadline=deadline)
             for i in range(wave_size)]
@@ -197,6 +234,13 @@ def main():
               f"{s['dispatches']} dispatches, busy slot fraction "
               f"{s['busy_slot_fraction']}, mean refill gap "
               f"{s['mean_refill_gap']} steps")
+    if "paged" in stats:
+        p = stats["paged"]
+        print(f"paged: {p['pages_in_use']}/{p['page_count']} pages in "
+              f"use (peak {p['peak_pages']}), {p['prefix_hits']} prefix "
+              f"hits, {p['skipped_prefill_tokens']} prompt tokens "
+              f"skipped (rate {p['prefill_skip_rate']:.3f}), "
+              f"{p['evictions']} evictions")
     c = stats["cache"]
     first = f"{t_first:.2f}s" if t_first is not None else "n/a"
     print(f"{batcher.cfg.name}: first token {first}; cache entries="

@@ -27,8 +27,10 @@ from repro.dist.sharding import (
 )
 from repro.models.base import (
     ArchConfig,
+    PageView,
     ShapeSpec,
     build_model,
+    paged_state_specs,
     state_batch_axes,
     wipe_state_slots,
 )
@@ -272,7 +274,8 @@ def make_prefill_decode_step(cfg: ArchConfig, batch: int, prefill_len: int,
 def make_masked_decode_step(cfg: ArchConfig, batch: int, max_len: int,
                             mesh: Mesh, mode: Optional[str] = None, *,
                             rules: Optional[ShardingRules] = None,
-                            steps_per_dispatch: int = 1
+                            steps_per_dispatch: int = 1,
+                            paged: Optional[Tuple[int, int]] = None
                             ) -> LoweringBundle:
     """Slot-masked decode micro-run for continuous batching (one
     executable per (bucket, k), shape-stable under churn — zero
@@ -310,8 +313,20 @@ def make_masked_decode_step(cfg: ArchConfig, batch: int, max_len: int,
       its writes land outside every other slot's window, so they are
       harmless.
 
+    With ``paged=(page_count, page_size)`` the KV leaves are the shared
+    page pool instead of per-bucket slabs, and the step takes a ninth
+    input — ``table`` [B, max_len // page_size] int32, each slot's page
+    table. Attention then reads/writes at each slot's LOCAL position
+    ``pos + i - start[i, b]`` through its table (RoPE included), so
+    ``start`` doubles as the local-coordinate origin and may sit BEFORE
+    the admission boundary when a prompt prefix was served from the
+    prefix cache. The fresh-lane wipe covers only the dense leaves
+    (SSM/conv/cross); stale pool pages are invisible behind the
+    local-position validity mask. See ``docs/memory_model.md``.
+
     Inputs:  (params, state, feed [k,B] i32, prev [B] i32, pos [] i32,
-              start [k,B] i32, active [k,B] bool, fresh [k,B] bool) —
+              start [k,B] i32, active [k,B] bool, fresh [k,B] bool
+              [, table [B, max_len/ps] i32]) —
              ``pos`` is the micro-run's base position; scan step ``i``
              runs global position ``pos + i``.
     Outputs: (toks [k,B] i32 — greedy argmax for active lane-steps, 0
@@ -326,20 +341,35 @@ def make_masked_decode_step(cfg: ArchConfig, batch: int, max_len: int,
     model = build_model(cfg)
     pspecs = model.param_specs()
     sspecs = model.decode_state_specs(batch, max_len)
+    if paged is not None:
+        page_count, page_size = paged
+        if max_len % page_size:
+            raise ValueError(
+                f"max_len {max_len} must be a multiple of page_size "
+                f"{page_size}")
+        sspecs = paged_state_specs(sspecs, page_count, page_size)
+        n_tables = max_len // page_size
 
     batch_axes = state_batch_axes(sspecs)
 
-    def masked_run(params, state, feed, prev, pos, start, active, fresh):
+    def masked_run(params, state, feed, prev, pos, start, active, fresh,
+                   table=None):
         # admission lands on boundaries: only fresh[0] may be set, so
         # the wipe runs ONCE ahead of the scan, not k times inside it
+        # (paged mode: dense leaves only — pool pages need no wipe)
         state = wipe_state_slots(state, fresh[0], batch_axes)
 
         def body(carry, xs):
             st, pv = carry
             i, feed_i, start_i, active_i = xs
             tok_in = jnp.where(feed_i >= 0, feed_i, pv).astype(jnp.int32)
-            logits, st = model.decode_step(params, st, tok_in, pos + i,
-                                           window_start=start_i)
+            if paged is not None:
+                pages = PageView(table, pos + i - start_i, page_size)
+                logits, st = model.decode_step(params, st, tok_in, pos + i,
+                                               pages=pages)
+            else:
+                logits, st = model.decode_step(params, st, tok_in, pos + i,
+                                               window_start=start_i)
             tok = jnp.where(active_i,
                             jnp.argmax(logits, -1).astype(jnp.int32), 0)
             # pv is only ever read on live decode steps (feed == -1), and
@@ -363,16 +393,23 @@ def make_masked_decode_step(cfg: ArchConfig, batch: int, max_len: int,
     lane_i32 = jax.ShapeDtypeStruct((batch,), jnp.int32)
     sched_i32 = jax.ShapeDtypeStruct((k, batch), jnp.int32)
     sched_bool = jax.ShapeDtypeStruct((k, batch), jnp.bool_)
+    in_sh = (param_sh, state_sh, sched_sh, lane_sh, pos_sh,
+             sched_sh, sched_sh, sched_sh)
+    abstract = (
+        abstract_params(pspecs), abstract_params(sspecs),
+        sched_i32, lane_i32, jax.ShapeDtypeStruct((), jnp.int32),
+        sched_i32, sched_bool, sched_bool,
+    )
+    if paged is not None:
+        table_sh = NamedSharding(mesh, P())    # replicated: host-built int32
+        in_sh = in_sh + (table_sh,)
+        abstract = abstract + (
+            jax.ShapeDtypeStruct((batch, n_tables), jnp.int32),)
     return LoweringBundle(
         fn=masked_run,
-        in_shardings=(param_sh, state_sh, sched_sh, lane_sh, pos_sh,
-                      sched_sh, sched_sh, sched_sh),
+        in_shardings=in_sh,
         out_shardings=(sched_sh, lane_sh, state_sh),
-        abstract_inputs=(
-            abstract_params(pspecs), abstract_params(sspecs),
-            sched_i32, lane_i32, jax.ShapeDtypeStruct((), jnp.int32),
-            sched_i32, sched_bool, sched_bool,
-        ),
+        abstract_inputs=abstract,
         mesh=mesh,
         rules=rules,
         donate_argnums=(1,),

@@ -247,3 +247,59 @@ def decode_self_attention(
     o = mha(q, cache_k, cache_v, causal=False, kv_valid=kv_valid)
     out = linear(params["wo"], o.reshape(B, 1, n_heads * head_dim))
     return out, cache_k, cache_v
+
+
+def paged_decode_self_attention(
+    params: dict,
+    x: jnp.ndarray,              # [B, 1, d] current token hidden
+    cache_k: jnp.ndarray,        # [P, ps, KV, hd] this layer's page pool
+    cache_v: jnp.ndarray,
+    pages,                       # models.base.PageView (table, local_pos, ps)
+    *,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    rope_theta: float = 10000.0,
+):
+    """One decode step against the paged KV layout.
+
+    Each slot ``b`` lives in its OWN coordinate system: ``local_pos[b]``
+    is its position within its own sequence, page ``j`` of its table
+    holds local positions ``[j*ps, (j+1)*ps)``, and RoPE rotates by the
+    LOCAL position. That makes a page's contents a pure function of the
+    token prefix it encodes — the property the prefix cache relies on to
+    map one physical page read-only into many slots (see
+    ``docs/memory_model.md``). The dense path instead indexes at global
+    position with a ``window_start`` validity floor; both produce the
+    same scores because RoPE attention depends only on relative offsets.
+
+    Writes scatter the new K/V row to ``(table[b, local//ps],
+    local % ps)``; empty or self-masked lanes carry per-lane scratch
+    pages in their tables, so an inactive lane's write lands on a page
+    nothing reads. Reads gather the slot's whole table back into
+    ``[B, S, KV, hd]`` and mask to ``local_index <= local_pos[b]``.
+
+    Returns (out [B,1,d], new_pool_k, new_pool_v).
+    """
+    B = x.shape[0]
+    ps = pages.page_size
+    n_pages = pages.table.shape[1]
+    S = n_pages * ps
+    q = linear(params["wq"], x).reshape(B, 1, n_heads, head_dim)
+    k = linear(params["wk"], x).reshape(B, 1, n_kv, head_dim)
+    v = linear(params["wv"], x).reshape(B, 1, n_kv, head_dim)
+    local = jnp.clip(pages.local_pos.astype(jnp.int32), 0, S - 1)
+    inv_freq = rope_freqs(head_dim, rope_theta)
+    q = apply_rope(q, local[:, None], inv_freq)
+    k = apply_rope(k, local[:, None], inv_freq)
+    page_ids = jnp.take_along_axis(
+        pages.table, (local // ps)[:, None], axis=1)[:, 0]
+    offs = local % ps
+    cache_k = cache_k.at[page_ids, offs].set(k[:, 0])
+    cache_v = cache_v.at[page_ids, offs].set(v[:, 0])
+    k_all = cache_k[pages.table].reshape(B, S, n_kv, head_dim)
+    v_all = cache_v[pages.table].reshape(B, S, n_kv, head_dim)
+    kv_valid = jnp.arange(S)[None, :] <= local[:, None]
+    o = mha(q, k_all, v_all, causal=False, kv_valid=kv_valid)
+    out = linear(params["wo"], o.reshape(B, 1, n_heads * head_dim))
+    return out, cache_k, cache_v

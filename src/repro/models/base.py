@@ -18,7 +18,7 @@ take precomputed patch/frame embeddings as inputs.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -136,9 +136,16 @@ def state_batch_axes(sspecs):
     states alike. Shared by the in-step fresh lane
     (``make_masked_decode_step``) and the host-side
     ``StatePool.reset_slots`` so the two resets can never diverge.
+
+    Leaves with no batch axis map to ``-1`` (a sentinel, not ``None`` —
+    ``None`` is an empty pytree node and would break the tree.map) — the
+    paged KV pool has a page axis instead of a batch axis, needs no
+    per-slot wipe (stale pages are masked by the local-position validity
+    window), and :func:`wipe_state_slots` skips them.
     """
     return jax.tree.map(
-        lambda s: s.logical.index("batch"), sspecs,
+        lambda s: s.logical.index("batch") if "batch" in s.logical else -1,
+        sspecs,
         is_leaf=lambda x: isinstance(x, ParamSpec))
 
 
@@ -147,18 +154,67 @@ def wipe_state_slots(state, slot_mask, batch_axes):
 
     ``slot_mask`` is a [batch] bool vector; ``batch_axes`` comes from
     :func:`state_batch_axes` over the matching decode-state specs.
-    Traceable (used inside the masked decode step) and jit-friendly with
-    donation (used by the pool's per-slot reset).
+    Leaves whose axis entry is ``-1`` (the shared page pool) pass
+    through untouched. Traceable (used inside the masked decode step)
+    and jit-friendly with donation (used by the pool's per-slot reset).
     """
     batch = slot_mask.shape[0]
 
     def one(leaf, axis):
+        if axis < 0:
+            return leaf
         shape = [1] * leaf.ndim
         shape[axis] = batch
         return jnp.where(slot_mask.reshape(shape), jnp.zeros_like(leaf),
                          leaf)
 
     return jax.tree.map(one, state, batch_axes)
+
+
+class PageView(NamedTuple):
+    """Traceable view of the paged KV layout for one decode step.
+
+    ``table`` [B, max_len // page_size] int32 maps each slot's logical
+    page index to a physical page in the shared pool; ``local_pos`` [B]
+    int32 is each slot's position in its OWN sequence (the page-local
+    coordinate system — RoPE and cache indexing both use it, which is
+    what makes prefix pages position-independent and bit-reusable);
+    ``page_size`` is static. See ``docs/memory_model.md``.
+    """
+
+    table: Any
+    local_pos: Any
+    page_size: int
+
+
+# Decode-state leaves that move to the paged layout. Cross-attention
+# caches (``cross_k``/``cross_v``) and recurrent SSM/conv/RWKV state are
+# per-slot by construction and stay dense.
+PAGED_STATE_KEYS = ("cache_k", "cache_v")
+
+
+def paged_state_specs(sspecs, page_count: int, page_size: int):
+    """Rewrite self-attention KV leaves to the shared-pool layout.
+
+    A dense leaf ``[..., batch, max_len, kv, hd]`` (axes ``...,
+    "batch", "seq", ...``) becomes ``[..., page_count, page_size, kv,
+    hd]`` with both new axes replicated (logical ``None``): pages are
+    shared between slots and buckets, so neither maps onto a mesh data
+    axis. Head/hd sharding is preserved. All other leaves — cross
+    caches, SSM/conv/RWKV state — pass through unchanged.
+    """
+    out = {}
+    for name, s in sspecs.items():
+        if name not in PAGED_STATE_KEYS:
+            out[name] = s
+            continue
+        b = s.logical.index("batch")
+        q = s.logical.index("seq")
+        assert q == b + 1, (name, s.logical)
+        shape = s.shape[:b] + (page_count, page_size) + s.shape[q + 1:]
+        logical = s.logical[:b] + (None, None) + s.logical[q + 1:]
+        out[name] = ParamSpec(shape, logical, s.dtype, "zeros")
+    return out
 
 
 def build_model(cfg: ArchConfig):

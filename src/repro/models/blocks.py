@@ -12,6 +12,7 @@ from repro.layers.attention import (
     attention_spec,
     cross_attention,
     decode_self_attention,
+    paged_decode_self_attention,
     self_attention,
 )
 from repro.layers.mlp import swiglu, swiglu_spec
@@ -85,19 +86,27 @@ def attn_block(
 def attn_block_decode(
     params: dict,
     x: jnp.ndarray,              # [B, 1, d]
-    cache_k: jnp.ndarray,
+    cache_k: jnp.ndarray,        # dense [B,S,KV,hd] or paged [P,ps,KV,hd]
     cache_v: jnp.ndarray,
     pos: jnp.ndarray,
     cfg: ArchConfig,
     *,
     window_start: Optional[jnp.ndarray] = None,   # [B] int32 slot windows
+    pages=None,                  # models.base.PageView: paged KV layout
 ):
     h = rmsnorm(params["ln1"], x)
-    h, ck, cv = decode_self_attention(
-        params["attn"], h, cache_k, cache_v, pos,
-        n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.head_dim,
-        rope_theta=cfg.rope_theta, window_start=window_start,
-    )
+    if pages is not None:
+        h, ck, cv = paged_decode_self_attention(
+            params["attn"], h, cache_k, cache_v, pages,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.head_dim,
+            rope_theta=cfg.rope_theta,
+        )
+    else:
+        h, ck, cv = decode_self_attention(
+            params["attn"], h, cache_k, cache_v, pos,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.head_dim,
+            rope_theta=cfg.rope_theta, window_start=window_start,
+        )
     x = x + h
     h = rmsnorm(params["ln2"], x)
     h, _ = _ffn_part(params, h, cfg)

@@ -19,6 +19,7 @@ from repro.layers.attention import (
     cross_attention,
     decode_self_attention,
     mha,
+    paged_decode_self_attention,
     self_attention,
 )
 from repro.layers.embedding import embed, embedding_spec, lm_head_spec
@@ -153,7 +154,7 @@ class EncDecLM:
         }
 
     def decode_step(self, params, state: Dict, tokens, pos, *,
-                    window_start=None):
+                    window_start=None, pages=None):
         cfg = self.cfg
         x = embed(params["embed"], tokens[:, None])
         B = x.shape[0]
@@ -161,11 +162,18 @@ class EncDecLM:
         def body(x, inp):
             layer_params, ck, cv, xk, xv = inp
             h = layernorm(layer_params["ln1"], x)
-            h, ck, cv = decode_self_attention(
-                layer_params["attn"], h, ck, cv, pos,
-                n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.head_dim,
-                window_start=window_start,
-            )
+            if pages is not None:
+                h, ck, cv = paged_decode_self_attention(
+                    layer_params["attn"], h, ck, cv, pages,
+                    n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+                    head_dim=cfg.head_dim,
+                )
+            else:
+                h, ck, cv = decode_self_attention(
+                    layer_params["attn"], h, ck, cv, pos,
+                    n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+                    head_dim=cfg.head_dim, window_start=window_start,
+                )
             x = x + h
             h = layernorm(layer_params["ln_x"], x)
             q = linear(layer_params["xattn"]["wq"], h).reshape(

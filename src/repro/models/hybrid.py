@@ -120,7 +120,7 @@ class HybridModel:
         }
 
     def decode_step(self, params, state: Dict, tokens, pos, *,
-                    window_start=None):
+                    window_start=None, pages=None):
         cfg = self.cfg
         x = embed(params["embed"], tokens[:, None])
         shared = params["shared_attn"]
@@ -141,7 +141,8 @@ class HybridModel:
                 inner, x, (mamba_stack, ssm_states, conv_states)
             )
             x, ck, cv = attn_block_decode(shared, x, ck, cv, pos, cfg,
-                                          window_start=window_start)
+                                          window_start=window_start,
+                                          pages=pages)
             return x, (ssm_states, conv_states, ck, cv)
 
         x, (ssm, conv, ck, cv) = jax.lax.scan(

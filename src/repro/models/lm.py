@@ -89,13 +89,16 @@ class DecoderLM:
         }
 
     def decode_step(self, params, state: Dict, tokens: jnp.ndarray,
-                    pos: jnp.ndarray, *, window_start=None):
+                    pos: jnp.ndarray, *, window_start=None, pages=None):
         """One token for every sequence. tokens [B] int32; pos [] int32.
 
         ``window_start`` ([B] int32, optional) limits each slot's
         attention to cache positions >= its own window start — the
         continuous-batching slot-reuse contract (see
-        ``make_masked_decode_step``).
+        ``make_masked_decode_step``). With ``pages`` (a
+        ``models.base.PageView``) the KV leaves are the shared page pool
+        instead of per-slot slabs and ``window_start`` is unused: each
+        slot indexes (and RoPE-rotates at) its own local position.
         """
         cfg = self.cfg
         x = embed(params["embed"], tokens[:, None])
@@ -103,7 +106,8 @@ class DecoderLM:
         def body(x, inp):
             layer_params, ck, cv = inp
             x, ck, cv = attn_block_decode(layer_params, x, ck, cv, pos, cfg,
-                                          window_start=window_start)
+                                          window_start=window_start,
+                                          pages=pages)
             return x, (ck, cv)
 
         x, (ck, cv) = jax.lax.scan(

@@ -98,10 +98,11 @@ class RWKVModel:
         }
 
     def decode_step(self, params, state: Dict, tokens, pos, *,
-                    window_start=None):
+                    window_start=None, pages=None):
         cfg = self.cfg
-        del pos, window_start  # recurrent: position-free; slot reuse only
-        # needs the fresh-lane state reset (no KV cache to window)
+        del pos, window_start, pages  # recurrent: position-free, and the
+        # paged layout has no KV leaves here; slot reuse only needs the
+        # fresh-lane state reset (no KV cache to window)
         x = embed(params["embed"], tokens[:, None])
         x = layernorm(params["ln0"], x)
 

@@ -117,7 +117,7 @@ class VisionLM:
         return ks, vs
 
     def decode_step(self, params, state: Dict, tokens, pos, *,
-                    window_start=None):
+                    window_start=None, pages=None):
         cfg = self.cfg
         x = embed(params["embed"], tokens[:, None])
         B = x.shape[0]
@@ -128,7 +128,8 @@ class VisionLM:
             def inner(x, inp2):
                 layer_params, k1, v1 = inp2
                 x, k1, v1 = attn_block_decode(layer_params, x, k1, v1, pos,
-                                              cfg, window_start=window_start)
+                                              cfg, window_start=window_start,
+                                              pages=pages)
                 return x, (k1, v1)
 
             x, (ck, cv) = jax.lax.scan(inner, x, (selfs, ck, cv))

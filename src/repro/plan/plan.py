@@ -133,9 +133,31 @@ class ExecutionPlan:
         sspecs = self.model.decode_state_specs(batch, max_len)
         return specs_to_shardings(sspecs, self.mesh, self.rules)
 
-    def fresh_decode_state(self, batch: int, max_len: int):
-        """A zeroed, sharded decode-state pytree for one bucket shape."""
+    def fresh_decode_state(self, batch: int, max_len: int, paged=None,
+                           only: Optional[str] = None):
+        """A zeroed, sharded decode-state pytree for one bucket shape.
+
+        With ``paged=(page_count, page_size)`` the KV leaves come back in
+        the pooled ``[..., page_count, page_size, ...]`` layout produced
+        by :func:`repro.models.base.paged_state_specs` (batch-free; the
+        page table maps slots onto them) while recurrent/cross leaves
+        keep their dense per-slot shape. ``only`` restricts a paged build
+        to one half of the split: ``"pool"`` returns just the pooled KV
+        leaves (bucket-independent; the StatePool builds them once and
+        shares them across buckets), ``"dense"`` just the per-slot
+        remainder.
+        """
         sspecs = self.model.decode_state_specs(batch, max_len)
+        if paged is not None:
+            from repro.models.base import PAGED_STATE_KEYS, paged_state_specs
+
+            sspecs = paged_state_specs(sspecs, *paged)
+            if only == "pool":
+                sspecs = {k: s for k, s in sspecs.items()
+                          if k in PAGED_STATE_KEYS}
+            elif only == "dense":
+                sspecs = {k: s for k, s in sspecs.items()
+                          if k not in PAGED_STATE_KEYS}
         return jax.device_put(
             init_params(jax.random.PRNGKey(0), sspecs),
             specs_to_shardings(sspecs, self.mesh, self.rules))
@@ -176,14 +198,15 @@ class ExecutionPlan:
     # -- executables ----------------------------------------------------------
 
     def _key(self, kind: str, batch: int, max_len: int,
-             prefill_len: int = 0, steps: int = 1) -> CacheKey:
+             prefill_len: int = 0, steps: int = 1,
+             paged=()) -> CacheKey:
         return CacheKey(
             arch=self.cfg.name, kind=kind, batch=batch, max_len=max_len,
             prefill_len=prefill_len, mode=self.mode,
             mesh_axes=CacheKey.mesh_signature(self.mesh),
             quantized=self.cfg.quantized,
             stages=self.ir.pipeline_stages, qsig=self._qsig(),
-            steps=steps,
+            steps=steps, paged=tuple(paged),
         )
 
     def executable(self, kind: Optional[str] = None) -> CachedExecutable:
@@ -211,14 +234,19 @@ class ExecutionPlan:
 
     def serve_executable(self, kind: str, *, batch: int, max_len: int,
                          prefill_len: int = 0,
-                         steps_per_dispatch: int = 1) -> CachedExecutable:
+                         steps_per_dispatch: int = 1,
+                         paged=None) -> CachedExecutable:
         """A bucketed serving executable: ``kind`` is "decode" (single
         token against resident state), "prefill" (the prefill->decode
         scan handoff padded to ``prefill_len``), or "masked_decode" (the
         slot-masked continuous-batching micro-run — per-slot
         active/fresh lane schedules and attention windows, scanning
         ``steps_per_dispatch`` masked steps per call; one shape-stable
-        executable per (bucket, k), keyed separately in the cache)."""
+        executable per (bucket, k), keyed separately in the cache).
+        ``paged=(page_count, page_size)`` (masked_decode only) swaps the
+        dense per-slot KV slabs for the pooled paged layout plus a
+        per-slot page-table input; requires ``max_len % page_size == 0``.
+        """
         if steps_per_dispatch < 1:
             raise ValueError(
                 f"steps_per_dispatch must be >= 1, got {steps_per_dispatch}")
@@ -226,6 +254,18 @@ class ExecutionPlan:
             raise ValueError(
                 "steps_per_dispatch only applies to masked_decode "
                 f"executables, not {kind!r}")
+        if paged is not None:
+            if kind != "masked_decode":
+                raise ValueError(
+                    "paged KV only applies to masked_decode executables, "
+                    f"not {kind!r}")
+            page_count, page_size = paged
+            if page_size < 1 or page_count < 1:
+                raise ValueError(f"bad paged geometry {paged!r}")
+            if max_len % page_size:
+                raise ValueError(
+                    f"max_len {max_len} must be a multiple of page_size "
+                    f"{page_size}")
         if kind == "decode":
             shape = ShapeSpec(f"b{batch}xl{max_len}", max_len, batch,
                               "decode")
@@ -238,11 +278,12 @@ class ExecutionPlan:
         elif kind == "masked_decode":
             build = lambda: make_masked_decode_step(  # noqa: E731
                 self.cfg, batch, max_len, self.mesh, rules=self.rules,
-                steps_per_dispatch=steps_per_dispatch)
+                steps_per_dispatch=steps_per_dispatch, paged=paged)
         else:
             raise ValueError(f"unknown serve executable kind {kind!r}")
         key = self._key(kind, batch, max_len, prefill_len,
-                        steps=steps_per_dispatch)
+                        steps=steps_per_dispatch,
+                        paged=paged if paged is not None else ())
         self._built_any = True
         return self.cache.get_or_build(key, build)
 

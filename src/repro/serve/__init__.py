@@ -14,7 +14,13 @@ Public surface:
 * :class:`~repro.serve.cache.ExecutableCache` — process-wide
   ``lower().compile()`` cache with hit/miss/lowering/compile counters.
 * :class:`~repro.serve.state_pool.StatePool` — per-bucket resident
-  KV-cache/SSM state pools, with donated whole-state and per-slot resets.
+  KV-cache/SSM state pools, with donated whole-state and per-slot resets;
+  ``StatePool(plan, paged=(page_count, page_size))`` swaps the dense KV
+  slabs for one shared physical page pool.
+* :class:`~repro.serve.paging.PageAllocator` — host-side page
+  accounting for paged KV: ref-counted acquire/release, content-hashed
+  shared-prefix reuse (prefill skipping), LRU eviction. See
+  docs/memory_model.md.
 * :class:`~repro.serve.server.AsyncServeServer` — asyncio streaming
   front-end: concurrent arrivals, per-micro-run token streams,
   disconnect-driven cancellation, deadline shedding.
@@ -39,6 +45,7 @@ from repro.serve.batcher import (
     ServeBatcher,
 )
 from repro.serve.cache import CachedExecutable, CacheKey, ExecutableCache
+from repro.serve.paging import PageAllocator, SlotPages, prefix_page_hashes
 from repro.serve.policy import (
     AdmissionPolicy,
     DeadlinePolicy,
@@ -64,14 +71,17 @@ __all__ = [
     "DecodeRequest",
     "ExecutableCache",
     "FifoPolicy",
+    "PageAllocator",
     "PriorityPolicy",
     "RequestResult",
     "RequestShed",
     "ServeBatcher",
     "SlotEvent",
+    "SlotPages",
     "StatePool",
     "TrafficRequest",
     "TrafficSpec",
     "generate_traffic",
     "make_policy",
+    "prefix_page_hashes",
 ]

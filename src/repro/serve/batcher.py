@@ -144,6 +144,22 @@ class BucketPolicy:
             f"{self.buckets[-1].max_len}")
 
 
+_DEFAULT_PAGE_SIZE = 16
+
+
+def auto_paged(policy: "BucketPolicy",
+               page_size: int = _DEFAULT_PAGE_SIZE) -> tuple:
+    """A ``(page_count, page_size)`` geometry sized so paged mode is never
+    less capable than dense: enough pages to back every slot of every
+    bucket at full length, plus one pinned scratch page per lane of the
+    widest bucket. Real deployments size ``page_count`` to the HBM budget
+    instead — the paged benchmark's requests-per-HBM-byte metric is about
+    how few of these pages a live mix actually touches."""
+    pages = sum(b.batch * (b.max_len // page_size) for b in policy.buckets)
+    scratch = max(b.batch for b in policy.buckets)
+    return (pages + scratch, page_size)
+
+
 _LATENCY_WINDOW = 4096     # p50/p99 over the most recent N requests
 
 
@@ -166,6 +182,11 @@ class BucketMetrics:
     # per-slot idle steps, one entry per (dispatch, slot)
     slot_idle: Deque[int] = dataclasses.field(
         default_factory=lambda: collections.deque(maxlen=_LATENCY_WINDOW))
+    # paged-KV gauges (snapshot of the shared PageAllocator after the
+    # bucket's most recent dispatch; all zero in dense mode)
+    pages_in_use: int = 0
+    peak_pages: int = 0
+    prefix_hits: int = 0
 
     def summary(self) -> Dict[str, float]:
         lat = sorted(self.latencies)
@@ -193,6 +214,9 @@ class BucketMetrics:
             if self.slot_steps else 0.0,
             "p50_slot_idle_steps": pct(idle, 0.50),
             "p99_slot_idle_steps": pct(idle, 0.99),
+            "pages_in_use": self.pages_in_use,
+            "peak_pages": self.peak_pages,
+            "prefix_hits": self.prefix_hits,
         }
 
 
@@ -216,7 +240,8 @@ class ServeBatcher:
                  cache: Optional[ExecutableCache] = None,
                  schedule: str = "fifo",
                  steps_per_dispatch: int = 1,
-                 admission=None):
+                 admission=None,
+                 paged=None):
         from repro.plan import ExecutionPlan, build_plan
 
         if isinstance(plan_or_cfg, ExecutionPlan):
@@ -249,7 +274,26 @@ class ServeBatcher:
         self.schedule = schedule
         self.steps_per_dispatch = steps_per_dispatch
         self.policy = policy or BucketPolicy.debug()
-        self.pool = StatePool(self.plan)
+        # paged KV: True -> auto geometry, int -> auto with that page
+        # size, (page_count, page_size) -> exact
+        if paged is True:
+            paged = auto_paged(self.policy)
+        elif isinstance(paged, int):
+            paged = auto_paged(self.policy, page_size=paged)
+        elif paged is not None:
+            paged = tuple(paged)
+        if paged is not None:
+            if schedule != "continuous":
+                raise ValueError(
+                    "paged KV needs schedule='continuous' — only the "
+                    "masked-decode path threads page tables")
+            for b in self.policy.buckets:
+                if b.max_len % paged[1]:
+                    raise ValueError(
+                        f"bucket {b.label}: max_len must be a multiple of "
+                        f"page_size={paged[1]}")
+        self.paged = paged
+        self.pool = StatePool(self.plan, paged=paged)
         self.params = None
         self.metrics: Dict[str, BucketMetrics] = {}
         self._pending: Deque[DecodeRequest] = collections.deque()
@@ -408,11 +452,14 @@ class ServeBatcher:
 
     def _executable(self, kind: str, bucket: Bucket,
                     prefill_len: int) -> CachedExecutable:
+        kw = {}
+        if kind == "masked_decode" and self.paged is not None:
+            kw["paged"] = self.paged
         return self.plan.serve_executable(
             kind, batch=bucket.batch, max_len=bucket.max_len,
             prefill_len=prefill_len,
             steps_per_dispatch=self.steps_per_dispatch
-            if kind == "masked_decode" else 1)
+            if kind == "masked_decode" else 1, **kw)
 
     def _argmax(self, bucket: Bucket, tok_sharding):
         fn = self._argmax_fns.get(bucket.label)
@@ -514,4 +561,6 @@ class ServeBatcher:
         }
         if self._scheduler is not None:
             out["scheduler"] = self._scheduler.stats()
+        if getattr(self.pool, "allocator", None) is not None:
+            out["paged"] = self.pool.allocator.stats()
         return out

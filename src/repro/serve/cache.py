@@ -9,7 +9,7 @@ lowered+compiled XLA executable produced by a ``LoweringBundle`` from
 by everything that changes the program:
 
     (arch, kind, batch, max_len, prefill_len, mode, mesh axes, quantized,
-     stages, qsig, steps)
+     stages, qsig, steps, paged)
 
 ``ExecutableCache.get_or_build`` is the only entry point — the plan's
 Compile pass routes every executable in the system (train, prefill,
@@ -44,6 +44,10 @@ class CacheKey:
     masked-decode micro-run length (``steps_per_dispatch``): a k-step
     scanned executable is a different program than the single-step one,
     so distinct k values must never collide (1 for every other kind).
+    ``paged`` is ``()`` for dense state and ``(page_count, page_size)``
+    for a paged-KV masked-decode executable — the paged program takes an
+    extra page-table input and indexes a pooled cache, so it must never
+    collide with the dense one even at identical bucket geometry.
     """
 
     arch: str
@@ -57,6 +61,7 @@ class CacheKey:
     stages: int = 1
     qsig: Tuple[Tuple[Any, ...], ...] = ()
     steps: int = 1
+    paged: Tuple[int, ...] = ()
 
     @staticmethod
     def mesh_signature(mesh: Mesh) -> Tuple[Tuple[str, int], ...]:

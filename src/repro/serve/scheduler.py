@@ -98,11 +98,21 @@ class SlotEvent:
 
 @dataclasses.dataclass
 class _Slot:
-    """One in-flight request bound to a batch lane."""
+    """One in-flight request bound to a batch lane.
+
+    Paged mode: ``pages`` is the lane's
+    :class:`~repro.serve.paging.SlotPages` lease, and a prefix-cache hit
+    of ``shared_len`` tokens backdates ``start`` to ``pos - shared_len``
+    (possibly negative) with ``fed`` starting at ``shared_len`` — the
+    lane behaves exactly as if it had already teacher-forced the shared
+    prefix, so every downstream formula (``end_step``, result slicing,
+    streaming deltas) holds unchanged.
+    """
 
     req: DecodeRequest
     start: int            # global position of the request's first token
     fed: int = 0          # prompt tokens teacher-forced so far
+    pages: Optional[object] = None   # SlotPages lease (paged mode only)
 
     @property
     def end_step(self) -> int:
@@ -137,6 +147,14 @@ class ContinuousScheduler:
                     f"bucket {b.label}: max_len must be a multiple of "
                     f"steps_per_dispatch={steps_per_dispatch} so micro-runs "
                     "tile the position space")
+        paged = getattr(pool, "paged", None)
+        if paged is not None:
+            for b in policy.buckets:
+                if b.max_len % paged[1]:
+                    raise ValueError(
+                        f"bucket {b.label}: max_len must be a multiple of "
+                        f"page_size={paged[1]} so page tables tile the "
+                        "position space")
         self.plan = plan
         self.policy = policy
         self.pool = pool
@@ -235,10 +253,20 @@ class ContinuousScheduler:
             if self.on_shed is not None:
                 self.on_shed(req.request_id)
 
+        alloc = getattr(self.pool, "allocator", None)
+
         def fits(req: DecodeRequest) -> bool:
             need = len(req.prompt) + req.max_new_tokens - 1
-            return req.need_len <= bucket.max_len and \
-                pos + need <= bucket.max_len
+            if req.need_len > bucket.max_len:
+                return False
+            if alloc is None:
+                return pos + need <= bucket.max_len
+            # prefix-cache hits shrink the positions the request consumes
+            # (its start is backdated by the shared span); admission also
+            # requires the page budget to cover the private pages
+            shared = alloc.probe(req.prompt)
+            return pos + (need - shared) <= bucket.max_len and \
+                alloc.can_admit(req.prompt, need)
 
         admitted: List[int] = []
         for b in range(bucket.batch):
@@ -247,7 +275,18 @@ class ContinuousScheduler:
             chosen = self.admission.select(pending, fits, now)
             if chosen is None:
                 break
-            slots[b] = _Slot(chosen, start=pos)
+            if alloc is not None:
+                need = len(chosen.prompt) + chosen.max_new_tokens - 1
+                lease = alloc.admit(chosen.prompt, need)
+                if lease is None:
+                    # the page budget moved between fits and admit
+                    # (eviction edge): requeue at the head, stop filling
+                    pending.appendleft(chosen)
+                    break
+                slots[b] = _Slot(chosen, start=pos - lease.shared_len,
+                                 fed=lease.shared_len, pages=lease)
+            else:
+                slots[b] = _Slot(chosen, start=pos)
             admitted.append(b)
             self.admissions += 1
             self.events.append(SlotEvent("admit", pos, b, chosen.request_id))
@@ -280,6 +319,14 @@ class ContinuousScheduler:
     def _free(self, slots, b, pos, freed_at, done=None):
         """Release lane ``b`` at boundary ``pos`` (finish or cancel)."""
         slot = slots[b]
+        alloc = getattr(self.pool, "allocator", None)
+        if alloc is not None and slot.pages is not None:
+            if done is not None:
+                # a finished request has teacher-forced its whole prompt:
+                # publish its full prompt pages to the prefix cache so a
+                # follower sharing the prefix skips that prefill span
+                alloc.publish(slot.pages, slot.fed)
+            alloc.release(slot.pages)
         if done is not None:
             done.append((slot.req, b, slot.start))
             # the free happened when the request produced its last token
@@ -303,11 +350,21 @@ class ContinuousScheduler:
         head = self.admission.peek(pending, self._now())
         bucket = self.policy.bucket_for(head.need_len)
         B, L = bucket.batch, bucket.max_len
+        paged = getattr(self.pool, "paged", None)
+        alloc = getattr(self.pool, "allocator", None)
+        kw = {"paged": paged} if paged is not None else {}
         exe = self.plan.serve_executable("masked_decode", batch=B, max_len=L,
-                                         steps_per_dispatch=k)
+                                         steps_per_dispatch=k, **kw)
         sched_sh = exe.bundle.in_shardings[2]
         pos_sh = exe.bundle.in_shardings[4]
         prev_sh = exe.bundle.in_shardings[3]
+        if paged is not None:
+            table_sh = exe.bundle.in_shardings[8]
+            n_tables = L // paged[1]
+            # pinned per-lane scratch pages: empty and self-masked lanes
+            # still execute the step, and their (masked, never read)
+            # writes must land somewhere harmless
+            scratch = alloc.scratch(B)
 
         state = self.pool.acquire(B, L)
         slots: List[Optional[_Slot]] = [None] * B
@@ -323,11 +380,11 @@ class ContinuousScheduler:
         # in the steady decode state reuse the resident device buffers
         lane_cache: Dict[str, tuple] = {}
 
-        def lane(name, host):
+        def lane(name, host, sh=sched_sh):
             cached = lane_cache.get(name)
             if cached is not None and np.array_equal(cached[0], host):
                 return cached[1]
-            dev = jax.device_put(host, sched_sh)
+            dev = jax.device_put(host, sh)
             lane_cache[name] = (host, dev)
             return dev
 
@@ -368,6 +425,14 @@ class ContinuousScheduler:
                 # a dead request's KV/SSM past the boundary
                 state = self.pool.reset_slots(B, L, state, cancel_mask)
             drain_cancels()
+            if alloc is not None:
+                # incremental publish: every fully teacher-forced prompt
+                # page of a still-running request becomes a prefix-cache
+                # entry NOW, so a follower admitted at this boundary can
+                # already share it
+                for slot in slots:
+                    if slot is not None and slot.pages is not None:
+                        alloc.publish(slot.pages, slot.fed)
 
             fresh = np.zeros((k, B), bool)
             for b in self._admit(pending, bucket, slots, pos, freed_at):
@@ -402,13 +467,27 @@ class ContinuousScheduler:
                     else:
                         feed[i, b] = -1   # continue from the slot's argmax
 
+            extra = ()
+            if paged is not None:
+                # [B, n_tables] page table: the lease's pages first, the
+                # lane's pinned scratch page everywhere else (tail entries
+                # absorb clamped post-end writes; gathers of them are
+                # masked by kv_valid)
+                table = np.empty((B, n_tables), np.int32)
+                for b, slot in enumerate(slots):
+                    table[b, :] = scratch[b]
+                    if slot is not None and slot.pages is not None:
+                        pg = slot.pages.pages
+                        table[b, :len(pg)] = pg
+                extra = (lane("table", table, table_sh),)
             toks, prev, state = exe.compiled(
                 params, state,
                 lane("feed", feed), prev,
                 jax.device_put(np.int32(pos), pos_sh),
                 lane("start", start),
                 lane("active", active),
-                lane("fresh", fresh))
+                lane("fresh", fresh),
+                *extra)
             if self.on_tokens is not None:
                 # streaming: fetch this micro-run's block at the boundary
                 # and hand each live request its newly GENERATED tokens
@@ -477,6 +556,11 @@ class ContinuousScheduler:
         for b in range(B):
             m.busy_slot_steps += span - idle_steps[b]
             m.slot_idle.append(idle_steps[b])
+        if alloc is not None:
+            # gauges, not sums: the page pool is shared process-wide
+            m.pages_in_use = alloc.pages_in_use
+            m.peak_pages = alloc.peak_pages
+            m.prefix_hits = alloc.prefix_hits
         return results
 
     # -- observability --------------------------------------------------------

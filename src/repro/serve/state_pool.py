@@ -17,13 +17,32 @@ Lifecycle per dispatch:
 The step executables donate their state argument, so the pytree handed
 back by ``release`` is a *different* buffer than the one acquired — the
 pool only tracks counts per bucket, never object identity.
+
+Paged mode (``StatePool(plan, paged=(page_count, page_size))``) splits
+every state pytree in two (see docs/memory_model.md):
+
+* the **pooled KV leaves** (``cache_k``/``cache_v``) live in ONE shared
+  physical page pool in the ``[..., page_count, page_size, ...]`` layout
+  — built once, shared by every bucket, and NEVER zeroed on reuse
+  (zeroing would destroy prefix pages other requests still reference);
+  a host-side :class:`repro.serve.paging.PageAllocator` hands out page
+  ids, and stale page contents are harmless because a slot only reads
+  cache positions its own prefill/decode steps (or a shared prefix)
+  wrote;
+* the **dense remainder** (SSM/conv state, cross-attention caches) keeps
+  the per-bucket pooling above — acquired zeroed, slot-wiped on cancel.
+
+``acquire`` merges the pooled leaves into the bucket's dense remainder
+and ``release`` extracts the (donated-through) pooled leaves back out,
+so exactly one in-flight dispatch owns the pool at a time — which the
+continuous scheduler's sequential dispatch loop guarantees.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import threading
-from typing import Any, Dict, List, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -49,17 +68,46 @@ class StatePool:
     the plan's job; the pool only tracks reuse.
     """
 
-    def __init__(self, plan):
+    def __init__(self, plan, paged: Optional[Tuple[int, int]] = None):
         self.plan = plan
+        self.paged = tuple(paged) if paged else None
+        self.allocator = None
+        if self.paged is not None:
+            from repro.serve.paging import PageAllocator
+
+            self.allocator = PageAllocator(*self.paged)
         self._lock = threading.Lock()
         self._pools: Dict[BucketShape, _BucketPool] = {}
         self._reset_fns: Dict[BucketShape, Any] = {}
         self._slot_reset_fns: Dict[BucketShape, Any] = {}
         self.slot_resets = 0
+        # paged mode: the one shared physical page pool (lazily built)
+        # and a checkout guard — exactly one dispatch may own it
+        self._pool_leaves = None
+        self._pool_out = False
 
     def _fresh(self, bucket: BucketShape):
         batch, max_len = bucket
-        return self.plan.fresh_decode_state(batch, max_len)
+        if self.paged is None:
+            return self.plan.fresh_decode_state(batch, max_len)
+        return self.plan.fresh_decode_state(batch, max_len,
+                                            paged=self.paged, only="dense")
+
+    def _checkout_pool(self, bucket: BucketShape):
+        """The shared paged KV leaves, exclusively, for one dispatch."""
+        with self._lock:
+            if self._pool_out:
+                raise RuntimeError(
+                    "paged state pool is already checked out: paged mode "
+                    "supports one in-flight dispatch at a time")
+            self._pool_out = True
+            leaves = self._pool_leaves
+            self._pool_leaves = None
+        if leaves is None:
+            batch, max_len = bucket
+            leaves = self.plan.fresh_decode_state(
+                batch, max_len, paged=self.paged, only="pool")
+        return leaves
 
     def _pool(self, bucket: BucketShape) -> _BucketPool:
         if bucket not in self._pools:
@@ -77,7 +125,11 @@ class StatePool:
         return fn(state)
 
     def acquire(self, batch: int, max_len: int):
-        """A zeroed state pytree for the bucket, reusing released buffers."""
+        """A zeroed state pytree for the bucket, reusing released buffers.
+
+        Paged mode returns the bucket's zeroed DENSE remainder merged
+        with the shared (never-zeroed) page-pool leaves.
+        """
         bucket = (batch, max_len)
         with self._lock:
             pool = self._pool(bucket)
@@ -91,8 +143,12 @@ class StatePool:
                 pool.in_use += 1
         # build/zero outside the lock: both can take device time
         if state is None:
-            return self._fresh(bucket)
-        return self._reset(bucket, state)
+            state = self._fresh(bucket)
+        else:
+            state = self._reset(bucket, state)
+        if self.paged is not None:
+            state = dict(state, **self._checkout_pool(bucket))
+        return state
 
     def reset_slots(self, batch: int, max_len: int, state, slot_mask):
         """Zero selected batch lanes of a LIVE state pytree, in place.
@@ -112,9 +168,19 @@ class StatePool:
         bucket = (batch, max_len)
         fn = self._slot_reset_fns.get(bucket)
         if fn is None:
-            from repro.models.base import state_batch_axes, wipe_state_slots
+            from repro.models.base import (
+                paged_state_specs,
+                state_batch_axes,
+                wipe_state_slots,
+            )
 
             sspecs = self.plan.model.decode_state_specs(batch, max_len)
+            if self.paged is not None:
+                # pooled leaves have no batch axis (-1): the wipe skips
+                # them — a canceled request's pages go back to the
+                # allocator instead, and stale page contents are never
+                # read (a slot only attends over positions it wrote)
+                sspecs = paged_state_specs(sspecs, *self.paged)
             batch_axes = state_batch_axes(sspecs)
             fn = jax.jit(
                 lambda state, mask: wipe_state_slots(state, mask,
@@ -130,6 +196,19 @@ class StatePool:
 
     def release(self, batch: int, max_len: int, state) -> None:
         bucket = (batch, max_len)
+        if self.paged is not None:
+            from repro.models.base import PAGED_STATE_KEYS
+
+            # the executables donated the state through, so the pooled
+            # leaves inside it ARE the current page pool: check it back
+            # in for the next dispatch and free-list only the remainder
+            leaves = {k: v for k, v in state.items()
+                      if k in PAGED_STATE_KEYS}
+            state = {k: v for k, v in state.items()
+                     if k not in PAGED_STATE_KEYS}
+            with self._lock:
+                self._pool_leaves = leaves
+                self._pool_out = False
         with self._lock:
             pool = self._pool(bucket)
             pool.free.append(state)

@@ -1,0 +1,238 @@
+"""Property suite for the host-side page allocator (repro.serve.paging).
+
+The allocator is pure host bookkeeping — no JAX — so these tests churn
+it hard: randomized admit/publish/release interleavings (hypothesis
+when installed, seeded np.random twins always) against the invariants
+the paged serving path relies on:
+
+* no page is ever writable by two slots at once;
+* reference counts hit zero exactly at release, and pages conserve:
+  free + in-use == page_count at every step;
+* copy-on-write never hands out a shared (prefix-cache) page as any
+  slot's private page — the divergent page is a fresh allocation;
+* the prefix cache actually skips prefill for a shared system prompt.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from conftest import SEED, hypothesis_or_skip_stub
+from repro.serve.paging import PageAllocator, prefix_page_hashes
+
+given, settings, st = hypothesis_or_skip_stub()
+
+
+def check_invariants(alloc: PageAllocator, leases) -> None:
+    """Assert every allocator invariant against the live lease set."""
+    # conservation: every page is free xor refcounted, never both
+    assert alloc.pages_free + alloc.pages_in_use == alloc.page_count
+    assert len(alloc._refs) == alloc.pages_in_use
+    assert set(alloc._free).isdisjoint(alloc._refs)
+    assert all(c > 0 for c in alloc._refs.values())
+
+    writable = []          # (lease, page) for every private page
+    for lease in leases:
+        for i, p in enumerate(lease.pages):
+            assert p in alloc._refs, (i, p)
+            if i >= lease.shared and i >= lease.published:
+                writable.append(p)
+    # no page is writable by two slots at once
+    assert len(writable) == len(set(writable)), writable
+    # a writable page is never a prefix-cache (shared) page
+    cached = set(alloc._prefix.values())
+    assert cached.isdisjoint(writable)
+    # shared pages are pinned: slot ref + cache ref
+    for lease in leases:
+        for p in lease.pages[:lease.shared]:
+            assert alloc._refs[p] >= 2, p
+    # scratch pages are pinned forever and never leased or cached
+    for p in alloc._scratch:
+        assert p in alloc._refs
+        assert p not in cached
+
+
+def _total_need(prompt, max_new):
+    return len(prompt) + max_new - 1
+
+
+def _churn(alloc: PageAllocator, rng: np.random.Generator, rounds: int):
+    """Random admit/publish/release interleaving with invariant checks."""
+    prompts = [tuple(rng.integers(0, 50, size=n).tolist())
+               for n in (5, 17, 33, 48)]
+    live = []
+    for _ in range(rounds):
+        op = rng.integers(0, 3)
+        if op == 0:
+            prompt = prompts[rng.integers(0, len(prompts))]
+            need = _total_need(prompt, int(rng.integers(1, 9)))
+            if alloc.can_admit(prompt, need):
+                lease = alloc.admit(prompt, need)
+                assert lease is not None
+                assert lease.shared_len <= len(prompt) - 1
+                live.append(lease)
+        elif op == 1 and live:
+            lease = live[rng.integers(0, len(live))]
+            fed = int(rng.integers(0, len(lease.prompt) + 1))
+            alloc.publish(lease, fed)
+        elif op == 2 and live:
+            lease = live.pop(rng.integers(0, len(live)))
+            alloc.release(lease)
+        check_invariants(alloc, live)
+    for lease in live:
+        alloc.release(lease)
+    check_invariants(alloc, [])
+
+
+def test_hash_chain_prefix_property():
+    ps = 4
+    a = prefix_page_hashes([1, 2, 3, 4, 5, 6, 7, 8], ps)
+    b = prefix_page_hashes([1, 2, 3, 4, 9, 9, 9, 9], ps)
+    assert a[0] == b[0] and a[1] != b[1]
+    # only FULL pages hash: a 7-token prompt has one 4-token page
+    assert len(prefix_page_hashes([1, 2, 3, 4, 5, 6, 7], ps)) == 1
+
+
+def test_admit_release_roundtrip():
+    alloc = PageAllocator(page_count=16, page_size=4)
+    lease = alloc.admit((1, 2, 3, 4, 5), need=8)
+    assert lease is not None and lease.shared == 0
+    assert len(lease.pages) == 2 and alloc.pages_in_use == 2
+    check_invariants(alloc, [lease])
+    alloc.release(lease)
+    assert alloc.pages_in_use == 0 and alloc.pages_free == 16
+    check_invariants(alloc, [])
+
+
+def test_prefix_reuse_skips_prefill_for_shared_system_prompt():
+    """Regression: two requests sharing a system prompt — the second
+    maps the published pages read-only and skips that prefill span."""
+    alloc = PageAllocator(page_count=32, page_size=4)
+    system = (9, 8, 7, 6, 5, 4, 3, 2)            # two full pages
+    first = alloc.admit(system + (11, 12), need=12)
+    assert first.shared == 0
+    alloc.publish(first, fed=10)                  # whole prompt fed
+    second = alloc.admit(system + (21,), need=11)
+    assert second.shared == 2 and second.shared_len == 8
+    assert second.pages[:2] == first.pages[:2]    # same physical pages
+    # the shared pages are read-only for BOTH slots now
+    for p in second.pages[:2]:
+        assert alloc._refs[p] >= 3                # 2 slots + cache
+    assert alloc.skipped_tokens == 8 and alloc.prefix_hits == 1
+    assert alloc.stats()["prefill_skip_rate"] > 0
+    check_invariants(alloc, [first, second])
+    alloc.release(first)
+    # published pages survive the publisher's release under the cache ref
+    third = alloc.admit(system + (31, 32, 33), need=14)
+    assert third.shared == 2
+    check_invariants(alloc, [second, third])
+    alloc.release(second)
+    alloc.release(third)
+    check_invariants(alloc, [])
+
+
+def test_cow_divergent_page_is_fresh_allocation():
+    """The first divergent page is allocated private (COW-by-allocation),
+    never the cached page of the other branch."""
+    alloc = PageAllocator(page_count=32, page_size=4)
+    a = alloc.admit((1, 2, 3, 4, 5, 6, 7, 8, 9), need=12)
+    alloc.publish(a, fed=9)
+    b = alloc.admit((1, 2, 3, 4, 99, 98, 97, 96, 95), need=12)
+    assert b.shared == 1 and b.pages[0] == a.pages[0]
+    assert b.pages[1] != a.pages[1]               # diverged: private page
+    check_invariants(alloc, [a, b])
+
+
+def test_sharing_always_leaves_one_prompt_token_to_feed():
+    """Even a bit-identical resubmission shares at most the pages before
+    the prompt's last token — the slot must feed >= 1 token."""
+    alloc = PageAllocator(page_count=32, page_size=4)
+    prompt = (1, 2, 3, 4, 5, 6, 7, 8)             # exactly two pages
+    a = alloc.admit(prompt, need=10)
+    alloc.publish(a, fed=8)
+    b = alloc.admit(prompt, need=10)
+    assert b.shared == 1 and b.shared_len == 4    # page 2 NOT shared
+    check_invariants(alloc, [a, b])
+
+
+def test_lru_eviction_under_pressure_and_exhaustion():
+    alloc = PageAllocator(page_count=4, page_size=4)
+    a = alloc.admit((1, 2, 3, 4, 5), need=6)      # 2 pages
+    alloc.publish(a, fed=5)
+    alloc.release(a)                               # page 0 cached, rc=1
+    assert alloc.pages_in_use == 1
+    b = alloc.admit((9, 9, 9, 9, 9, 9, 9), need=14)   # needs all 4 pages
+    assert b is not None and alloc.evictions == 1
+    assert len(alloc._prefix) == 0                # cache entry evicted
+    # pool exhausted: admission fails cleanly and leaks nothing
+    free_before = alloc.pages_free
+    assert alloc.admit((5, 5, 5), need=5) is None
+    assert alloc.pages_free == free_before
+    check_invariants(alloc, [b])
+
+
+def test_failed_admit_rolls_back_prefix_pins():
+    alloc = PageAllocator(page_count=3, page_size=4)
+    a = alloc.admit((1, 2, 3, 4, 5), need=6)
+    alloc.publish(a, fed=5)
+    refs_before = dict(alloc._refs)
+    # shares page 0 but needs 3 private pages with only 1 free
+    assert alloc.admit((1, 2, 3, 4, 6, 7, 8, 9, 10), need=14) is None
+    assert alloc._refs == refs_before             # pins rolled back
+    check_invariants(alloc, [a])
+
+
+def test_scratch_pages_pinned_and_stable():
+    alloc = PageAllocator(page_count=8, page_size=4)
+    s2 = alloc.scratch(2)
+    assert alloc.scratch(2) == s2                 # idempotent
+    s3 = alloc.scratch(3)
+    assert s3[:2] == s2
+    check_invariants(alloc, [])
+    assert alloc.pages_in_use == 3
+
+
+def test_bad_geometry_rejected():
+    with pytest.raises(ValueError):
+        PageAllocator(0, 16)
+    with pytest.raises(ValueError):
+        PageAllocator(16, 0)
+
+
+def test_churn_conserves_pages_seeded():
+    rng = np.random.default_rng(SEED)
+    alloc = PageAllocator(page_count=24, page_size=4)
+    alloc.scratch(2)
+    _churn(alloc, rng, rounds=300)
+    # everything released: only scratch + cache refs remain
+    assert alloc.pages_in_use == 2 + len(alloc._prefix)
+
+
+@given(st.integers(min_value=0, max_value=2**32 - 1))
+@settings(max_examples=25, deadline=None)
+def test_churn_conserves_pages_hypothesis(seed):
+    rng = np.random.default_rng(seed)
+    alloc = PageAllocator(page_count=16, page_size=4)
+    alloc.scratch(1)
+    _churn(alloc, rng, rounds=120)
+    assert alloc.pages_in_use == 1 + len(alloc._prefix)
+
+
+@given(st.lists(st.integers(min_value=0, max_value=7),
+                min_size=1, max_size=40),
+       st.integers(min_value=2, max_value=8))
+@settings(max_examples=50, deadline=None)
+def test_probe_matches_published_prefix(prompt, page_size):
+    """probe() returns exactly the page-aligned published span, capped
+    so at least one prompt token stays unshared."""
+    alloc = PageAllocator(page_count=64, page_size=page_size)
+    prompt = tuple(prompt)
+    need = len(prompt) + 4
+    lease = alloc.admit(prompt, need)
+    alloc.publish(lease, fed=len(prompt))
+    got = alloc.probe(prompt)
+    cap = (len(prompt) - 1) // page_size
+    full = len(prompt) // page_size
+    assert got == min(cap, full) * page_size
+    assert got <= len(prompt) - 1
