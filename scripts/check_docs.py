@@ -13,11 +13,15 @@ Checks, over README.md and docs/*.md:
    even parse are worse than no examples.
 
 Stdlib only, no repo imports; runs from any cwd. Exit code 1 and a
-per-problem listing on failure.
+per-problem listing on failure. ``--json FILE`` writes a report in the
+same shape ``python -m repro.analysis --json`` emits (tool/ok/counts/
+findings), so CI uploads both gates as one artifact family.
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import pathlib
 import re
 import sys
@@ -80,14 +84,20 @@ def anchors_of(text: str) -> set:
     return out
 
 
-def check() -> List[str]:
-    problems: List[str] = []
+def check() -> List[Dict[str, object]]:
+    """Structured problems: rule/file/line/message dicts (the same
+    finding shape ``repro.analysis`` reports)."""
+    problems: List[Dict[str, object]] = []
     anchor_cache: Dict[pathlib.Path, set] = {}
 
     def anchors(path: pathlib.Path) -> set:
         if path not in anchor_cache:
             anchor_cache[path] = anchors_of(path.read_text(encoding="utf-8"))
         return anchor_cache[path]
+
+    def add(rule: str, rel: pathlib.Path, lineno: int, message: str):
+        problems.append({"rule": rule, "file": str(rel), "line": lineno,
+                         "message": message})
 
     for doc in doc_files():
         rel = doc.relative_to(REPO)
@@ -99,9 +109,9 @@ def check() -> List[str]:
                 try:
                     compile(payload, f"{rel}:{lineno}", "exec")
                 except SyntaxError as e:
-                    problems.append(
-                        f"{rel}:{lineno}: python block does not compile: "
-                        f"{e.msg} (block line {e.lineno})")
+                    add("DOC103", rel, lineno,
+                        f"python block does not compile: {e.msg} "
+                        f"(block line {e.lineno})")
                 continue
             if kind != "text":
                 continue
@@ -113,24 +123,44 @@ def check() -> List[str]:
                 dest = doc if not path_part else (
                     doc.parent / path_part).resolve()
                 if not dest.exists():
-                    problems.append(
-                        f"{rel}:{lineno}: broken link -> {target}")
+                    add("DOC101", rel, lineno, f"broken link -> {target}")
                     continue
                 if frag and dest.suffix == ".md":
                     if frag.lower() not in anchors(dest):
-                        problems.append(
-                            f"{rel}:{lineno}: bad anchor -> {target} "
-                            f"(no heading slugs to '{frag}' in "
-                            f"{dest.relative_to(REPO)})")
+                        add("DOC102", rel, lineno,
+                            f"bad anchor -> {target} (no heading slugs "
+                            f"to '{frag}' in {dest.relative_to(REPO)})")
     return problems
 
 
-def main() -> int:
+def report_json(problems: List[Dict[str, object]],
+                n_docs: int) -> Dict[str, object]:
+    return {
+        "tool": "scripts.check_docs",
+        "ok": not problems,
+        "counts": {"files": n_docs, "findings": len(problems)},
+        "findings": problems,
+    }
+
+
+def main(argv: List[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--json", metavar="FILE",
+                    help="write the JSON report to FILE ('-' for stdout)")
+    args = ap.parse_args(argv)
+
     problems = check()
     n_docs = len(doc_files())
+    if args.json:
+        payload = json.dumps(report_json(problems, n_docs),
+                             indent=2) + "\n"
+        if args.json == "-":
+            sys.stdout.write(payload)
+        else:
+            pathlib.Path(args.json).write_text(payload, encoding="utf-8")
     if problems:
         for p in problems:
-            print(p)
+            print(f"{p['file']}:{p['line']}: {p['message']}")
         print(f"check_docs: {len(problems)} problem(s) across "
               f"{n_docs} file(s)")
         return 1

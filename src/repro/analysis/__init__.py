@@ -1,0 +1,34 @@
+"""repro.analysis — static analysis for the serving stack's compile
+discipline.
+
+The runtime gates (zero post-warmup lowerings, cache hit counters,
+parity tests) prove the invariants *after* the fact; this package
+proves them on every commit without running any jax. Five rules:
+
+* RA101 ``retrace-hazard`` — no Python control flow on traced values,
+  no concretization, no mutable closure capture in jitted/scanned
+  bodies, no unhashable static args.
+* RA201 ``cachekey-completeness`` — every compile-affecting parameter
+  reaching an executable builder maps to a ``CacheKey`` field.
+* RA301 ``donation-safety`` — donated buffers are rebound at the
+  dispatch assignment and never read stale.
+* RA401 ``hot-path-purity`` — no syncs/transfers/allocations in
+  boundary callbacks, admission policies, or the server worker loop.
+* RA501 ``layering`` — launchers/batcher/benchmarks stay thin
+  ``repro.plan`` clients (import-graph-aware, resolves re-exports).
+
+CLI: ``python -m repro.analysis [paths...] [--json out.json]``; see
+``docs/static_analysis.md`` for the rule catalog and the baseline
+workflow. The package is stdlib-only by design so the CI job runs in a
+bare interpreter.
+"""
+
+from .engine import Finding, Module, Report, SourceTree, analyze, load_tree
+from .baseline import Baseline, write_baseline
+from .rules import ALL_RULES, RULES_BY_ID, get_rules
+
+__all__ = [
+    "Finding", "Module", "Report", "SourceTree", "analyze", "load_tree",
+    "Baseline", "write_baseline",
+    "ALL_RULES", "RULES_BY_ID", "get_rules",
+]

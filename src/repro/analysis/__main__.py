@@ -1,0 +1,96 @@
+"""CLI for the static-analysis suite.
+
+Usage::
+
+    python -m repro.analysis [paths...] [options]
+
+Defaults to scanning ``src/repro`` and ``benchmarks`` (when they exist
+under the current directory) with the baseline at
+``analysis_baseline.json``. Exits 0 iff there are no unbaselined
+findings and no baseline hygiene errors. ``--json`` writes the report
+in the same shape ``scripts/check_docs.py --json`` uses, so CI uploads
+both as one artifact family.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+from typing import List
+
+from .engine import analyze
+from .rules import ALL_RULES
+
+DEFAULT_BASELINE = "analysis_baseline.json"
+
+
+def _default_paths() -> List[str]:
+    out = [p for p in ("src/repro", "benchmarks")
+           if pathlib.Path(p).exists()]
+    return out or ["."]
+
+
+def main(argv: List[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static analysis of the serving stack's compile "
+                    "discipline (retrace hazards, cache-key "
+                    "completeness, donation safety, hot-path purity, "
+                    "layering).")
+    ap.add_argument("paths", nargs="*",
+                    help="files/directories to scan (default: src/repro "
+                         "and benchmarks)")
+    ap.add_argument("--json", metavar="FILE",
+                    help="write the JSON report to FILE ('-' for stdout)")
+    ap.add_argument("--baseline", metavar="FILE", default=DEFAULT_BASELINE,
+                    help=f"baseline file (default: {DEFAULT_BASELINE}; "
+                         f"missing file = empty baseline)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the baseline entirely")
+    ap.add_argument("--rules", metavar="ID", nargs="+",
+                    help="run only these rule ids (e.g. RA501)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalog and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for r in ALL_RULES:
+            print(f"{r.id}  {r.name}: {r.rationale}")
+        return 0
+
+    paths = args.paths or _default_paths()
+    baseline = None if args.no_baseline else args.baseline
+    try:
+        report = analyze(paths, rules=args.rules, baseline=baseline)
+    except KeyError as e:
+        print(f"repro.analysis: {e.args[0]}", file=sys.stderr)
+        return 2
+
+    if args.json:
+        payload = json.dumps(report.to_json(), indent=2) + "\n"
+        if args.json == "-":
+            sys.stdout.write(payload)
+        else:
+            pathlib.Path(args.json).write_text(payload, encoding="utf-8")
+
+    for f in report.findings:
+        print(f.render())
+    for e in report.errors:
+        print(f"error: {e}")
+    n_base = len(report.baselined)
+    base_note = f", {n_base} baselined" if n_base else ""
+    if report.ok:
+        print(f"repro.analysis: OK ({report.files} files, "
+              f"{len(ALL_RULES) if not args.rules else len(args.rules)} "
+              f"rule(s){base_note})")
+        return 0
+    print(f"repro.analysis: {len(report.findings)} finding(s), "
+          f"{len(report.errors)} error(s) across {report.files} "
+          f"file(s){base_note}")
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,248 @@
+"""Shared AST helpers for the analysis rules (stdlib-only).
+
+Every rule works on plain ``ast`` trees with parent links attached by
+:func:`add_parents`; nothing in this package imports jax or executes the
+code under analysis, so ``python -m repro.analysis`` runs in a bare
+interpreter (the CI job installs nothing).
+"""
+
+from __future__ import annotations
+
+import ast
+import builtins
+from typing import Iterator, List, Optional, Sequence, Set, Tuple, Union
+
+FunctionNode = Union[ast.FunctionDef, ast.AsyncFunctionDef]
+FUNCTION_NODES = (ast.FunctionDef, ast.AsyncFunctionDef)
+SCOPE_NODES = FUNCTION_NODES + (ast.Lambda, ast.ClassDef, ast.Module)
+
+_BUILTIN_NAMES = frozenset(dir(builtins))
+
+
+def add_parents(tree: ast.AST) -> ast.AST:
+    """Attach a ``.parent`` attribute to every node (idempotent)."""
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            child.parent = node  # type: ignore[attr-defined]
+    tree.parent = None  # type: ignore[attr-defined]
+    return tree
+
+
+def parents(node: ast.AST) -> Iterator[ast.AST]:
+    """The chain of ancestors, nearest first (requires add_parents)."""
+    cur = getattr(node, "parent", None)
+    while cur is not None:
+        yield cur
+        cur = getattr(cur, "parent", None)
+
+
+def enclosing(node: ast.AST, kinds) -> Optional[ast.AST]:
+    """Nearest ancestor of one of ``kinds`` (requires add_parents)."""
+    for p in parents(node):
+        if isinstance(p, kinds):
+            return p
+    return None
+
+
+def enclosing_statement(node: ast.AST) -> ast.stmt:
+    """The statement that directly contains ``node``."""
+    cur = node
+    while not isinstance(cur, ast.stmt):
+        cur = cur.parent  # type: ignore[attr-defined]
+    return cur
+
+
+def qualname(node: ast.AST) -> str:
+    """Dotted path of enclosing defs/classes, e.g. ``Plan.serve_executable``.
+
+    Requires :func:`add_parents`. Lambdas render as ``<lambda>``.
+    """
+    names: List[str] = []
+    cur: Optional[ast.AST] = node
+    while cur is not None:
+        if isinstance(cur, FUNCTION_NODES + (ast.ClassDef,)):
+            names.append(cur.name)
+        elif isinstance(cur, ast.Lambda):
+            names.append("<lambda>")
+        cur = getattr(cur, "parent", None)
+    return ".".join(reversed(names)) or "<module>"
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """``Name``/``Attribute`` chains as a dotted string, else None.
+
+    ``jax.lax.scan`` -> "jax.lax.scan"; calls and subscripts break the
+    chain (returns None) — rules only match syntactically obvious uses.
+    """
+    parts: List[str] = []
+    cur = node
+    while isinstance(cur, ast.Attribute):
+        parts.append(cur.attr)
+        cur = cur.value
+    if isinstance(cur, ast.Name):
+        parts.append(cur.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_name(call: ast.Call) -> Optional[str]:
+    return dotted(call.func)
+
+
+def param_names(fn: Union[FunctionNode, ast.Lambda]) -> List[str]:
+    """All parameter names in order (pos-only, positional, kw-only,
+    *args, **kwargs)."""
+    a = fn.args
+    out = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+    if a.vararg:
+        out.append(a.vararg.arg)
+    if a.kwarg:
+        out.append(a.kwarg.arg)
+    return out
+
+
+def assigned_names(target: ast.AST) -> Set[str]:
+    """Plain names bound by an assignment target (tuples unpacked;
+    attribute/subscript targets are not name bindings)."""
+    out: Set[str] = set()
+    for node in ast.walk(target):
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Store):
+            out.add(node.id)
+    return out
+
+
+def statement_bound_names(stmt: ast.stmt) -> Set[str]:
+    """Names (re)bound by this statement, if it is an assignment."""
+    if isinstance(stmt, ast.Assign):
+        out: Set[str] = set()
+        for t in stmt.targets:
+            out |= assigned_names(t)
+        return out
+    if isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+        return assigned_names(stmt.target)
+    return set()
+
+
+def local_names(fn: Union[FunctionNode, ast.Lambda]) -> Set[str]:
+    """Parameters plus every name the function body binds (assignments,
+    for-targets, with-as, comprehensions, nested defs, imports)."""
+    out: Set[str] = set(param_names(fn))
+    body = fn.body if isinstance(fn.body, list) else [fn.body]
+    for stmt in body:
+        for node in ast.walk(stmt):  # type: ignore[arg-type]
+            if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Store):
+                out.add(node.id)
+            elif isinstance(node, FUNCTION_NODES):
+                out.add(node.name)
+            elif isinstance(node, ast.ClassDef):
+                out.add(node.name)
+            elif isinstance(node, (ast.Import, ast.ImportFrom)):
+                for alias in node.names:
+                    out.add((alias.asname or alias.name).split(".")[0])
+    return out
+
+
+def is_builtin(name: str) -> bool:
+    return name in _BUILTIN_NAMES
+
+
+def module_level_names(tree: ast.Module) -> Set[str]:
+    """Names bound at module top level (imports, defs, assignments)."""
+    out: Set[str] = set()
+    for stmt in tree.body:
+        if isinstance(stmt, (ast.Import, ast.ImportFrom)):
+            for alias in stmt.names:
+                out.add((alias.asname or alias.name).split(".")[0])
+        elif isinstance(stmt, FUNCTION_NODES + (ast.ClassDef,)):
+            out.add(stmt.name)
+        else:
+            out |= statement_bound_names(stmt)
+    return out
+
+
+# Attributes of a traced value that are static at trace time: branching
+# on them cannot retrace (shapes/dtypes are part of the trace signature).
+STATIC_ATTRS = frozenset({"shape", "ndim", "dtype", "size"})
+
+
+class _RefVisitor(ast.NodeVisitor):
+    def __init__(self, names: Set[str], skip_static_attrs: bool,
+                 skip_is_comparisons: bool):
+        self.names = names
+        self.skip_static_attrs = skip_static_attrs
+        self.skip_is = skip_is_comparisons
+        self.hits: Set[str] = set()
+
+    def visit_Name(self, node: ast.Name) -> None:
+        if isinstance(node.ctx, ast.Load) and node.id in self.names:
+            self.hits.add(node.id)
+
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        if self.skip_static_attrs and node.attr in STATIC_ATTRS:
+            return  # x.shape / x.ndim / x.dtype are trace-static
+        self.generic_visit(node)
+
+    def visit_Compare(self, node: ast.Compare) -> None:
+        if self.skip_is and all(isinstance(op, (ast.Is, ast.IsNot))
+                                for op in node.ops):
+            return  # `x is None` resolves at trace time, not per value
+        self.generic_visit(node)
+
+    def visit_Lambda(self, node: ast.Lambda) -> None:
+        shadowed = set(param_names(node)) & self.names
+        if shadowed:
+            inner = _RefVisitor(self.names - shadowed,
+                                self.skip_static_attrs, self.skip_is)
+            inner.visit(node.body)
+            self.hits |= inner.hits
+        else:
+            self.generic_visit(node)
+
+
+def references(expr: ast.AST, names: Set[str], *,
+               skip_static_attrs: bool = False,
+               skip_is_comparisons: bool = False) -> Set[str]:
+    """Which of ``names`` the expression reads (loads)."""
+    if not names:
+        return set()
+    v = _RefVisitor(names, skip_static_attrs, skip_is_comparisons)
+    v.visit(expr)
+    return v.hits
+
+
+def const_index_set(node: ast.AST) -> Optional[Set[int]]:
+    """A literal int or tuple/list of ints as a set, else None."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, int) \
+            and not isinstance(node.value, bool):
+        return {node.value}
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out: Set[int] = set()
+        for elt in node.elts:
+            if not (isinstance(elt, ast.Constant)
+                    and isinstance(elt.value, int)):
+                return None
+            out.add(elt.value)
+        return out
+    return None
+
+
+def const_str_set(node: ast.AST) -> Optional[Set[str]]:
+    """A literal str or tuple/list of strs as a set, else None."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return {node.value}
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out: Set[str] = set()
+        for elt in node.elts:
+            if not (isinstance(elt, ast.Constant)
+                    and isinstance(elt.value, str)):
+                return None
+            out.add(elt.value)
+        return out
+    return None
+
+
+def keyword_value(call: ast.Call, name: str) -> Optional[ast.AST]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None

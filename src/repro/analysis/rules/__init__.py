@@ -1,0 +1,46 @@
+"""Rule registry for ``repro.analysis``.
+
+Each rule is a small object with ``id``/``name``/``rationale`` metadata
+and a ``run(tree) -> List[Finding]`` method. Rules are registered here
+in id order; ``--rules`` on the CLI and the ``rules=`` kwarg of
+:func:`repro.analysis.analyze` filter by id.
+"""
+
+from __future__ import annotations
+
+from typing import Iterable, List, Optional
+
+from ..engine import Finding, SourceTree
+from .retrace import RetraceHazardRule
+from .cachekey import CacheKeyCompletenessRule
+from .donation import DonationSafetyRule
+from .hotpath import HotPathPurityRule
+from .layering import LayeringRule
+
+ALL_RULES = (
+    RetraceHazardRule(),
+    CacheKeyCompletenessRule(),
+    DonationSafetyRule(),
+    HotPathPurityRule(),
+    LayeringRule(),
+)
+
+RULES_BY_ID = {r.id: r for r in ALL_RULES}
+
+
+def get_rules(ids: Optional[Iterable[str]] = None):
+    if ids is None:
+        return list(ALL_RULES)
+    ids = list(ids)
+    unknown = [i for i in ids if i not in RULES_BY_ID]
+    if unknown:
+        raise KeyError(f"unknown rule id(s): {', '.join(unknown)} "
+                       f"(have: {', '.join(RULES_BY_ID)})")
+    return [RULES_BY_ID[i] for i in ids]
+
+
+__all__ = [
+    "ALL_RULES", "RULES_BY_ID", "get_rules", "Finding", "SourceTree",
+    "RetraceHazardRule", "CacheKeyCompletenessRule", "DonationSafetyRule",
+    "HotPathPurityRule", "LayeringRule",
+]

@@ -1,0 +1,152 @@
+"""RA301 — donation safety.
+
+The serve/train step builders donate their state buffer at positional
+index 1 (``donate_argnums=(1,)``; train also donates 0 — both rebound
+by convention). After dispatch, XLA may alias the donated buffer's
+memory for the outputs: reading the old Python name afterwards is
+use-after-free at the buffer level. The safe idiom rebinds the donated
+name in the same assignment::
+
+    toks, prev, state = exe.compiled(params, state, feed, prev)
+
+This rule flags, in host code:
+
+* a ``<x>.compiled(...)`` call whose positional arg 1 is a plain name
+  that the call's own statement does **not** rebind, when that name is
+  read later in the function (or anywhere in the enclosing loop — the
+  read happens on the next iteration, after donation);
+* the same pattern for locally jitted functions whose construction
+  site names ``donate_argnums`` literally
+  (``f = jax.jit(g, donate_argnums=0)``).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set
+
+from ..engine import Finding, Module, SourceTree
+from .. import astutil as A
+
+JIT_NAMES = {"jax.jit", "jit"}
+# By repo convention every *.compiled executable donates its state at
+# positional index 1 (see launch/steps.py builders).
+COMPILED_DONATED_POSITIONS = (1,)
+
+
+class DonationSafetyRule:
+    id = "RA301"
+    name = "donation-safety"
+    rationale = ("a buffer passed at a donated position may be aliased "
+                 "by XLA immediately after dispatch; host code must "
+                 "rebind the name in the same assignment and never read "
+                 "the stale reference")
+
+    def run(self, tree: SourceTree) -> List[Finding]:
+        findings: List[Finding] = []
+        for mod in tree:
+            for fn in ast.walk(mod.tree):
+                if isinstance(fn, A.FUNCTION_NODES):
+                    findings.extend(self._check_scope(mod, fn))
+        return findings
+
+    def _check_scope(self, mod: Module, fn) -> List[Finding]:
+        findings: List[Finding] = []
+        donate_vars = self._local_donators(fn)
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            if A.enclosing(node, A.FUNCTION_NODES) is not fn:
+                continue  # belongs to a nested def; checked there
+            positions: Optional[Set[int]] = None
+            label = ""
+            if (isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "compiled"):
+                positions = set(COMPILED_DONATED_POSITIONS)
+                label = (A.dotted(node.func) or ".compiled")
+            elif (isinstance(node.func, ast.Name)
+                  and node.func.id in donate_vars):
+                positions = donate_vars[node.func.id]
+                label = node.func.id
+            if positions is None:
+                continue
+            for pos in sorted(positions):
+                if pos >= len(node.args):
+                    continue
+                arg = node.args[pos]
+                if not isinstance(arg, ast.Name):
+                    continue
+                finding = self._check_read_after(mod, fn, node, arg,
+                                                 pos, label)
+                if finding is not None:
+                    findings.append(finding)
+        return findings
+
+    @staticmethod
+    def _local_donators(fn) -> Dict[str, Set[int]]:
+        """Vars assigned `jax.jit(..., donate_argnums=<literal>)`."""
+        out: Dict[str, Set[int]] = {}
+        for node in ast.walk(fn):
+            if not (isinstance(node, ast.Assign)
+                    and isinstance(node.value, ast.Call)
+                    and A.call_name(node.value) in JIT_NAMES):
+                continue
+            nums_node = A.keyword_value(node.value, "donate_argnums")
+            if nums_node is None:
+                continue
+            nums = A.const_index_set(nums_node)
+            if not nums:
+                continue
+            for name in A.statement_bound_names(node):
+                out[name] = nums
+        return out
+
+    def _check_read_after(self, mod: Module, fn, call: ast.Call,
+                          arg: ast.Name, pos: int,
+                          label: str) -> Optional[Finding]:
+        name = arg.id
+        stmt = A.enclosing_statement(call)
+        if name in A.statement_bound_names(stmt):
+            return None  # rebound by the dispatch statement: safe
+
+        qn = A.qualname(call)
+
+        def mk(line: int, where: str) -> Finding:
+            return Finding(
+                rule=self.id, file=mod.rel, line=line, symbol=qn,
+                key=f"read-after-donate:{qn}:{label}@{pos}:{name}",
+                message=(f"`{name}` is donated at position {pos} of "
+                         f"`{label}(...)` but {where} — rebind it in "
+                         f"the dispatch assignment "
+                         f"(`..., {name} = {label}(...)`)"))
+
+        # Inside a loop without a same-statement rebind, the donated
+        # name itself is re-read on the next iteration.
+        loop = None
+        for p in A.parents(call):
+            if p is fn:
+                break
+            if isinstance(p, (ast.For, ast.While)):
+                loop = p
+                break
+        if loop is not None:
+            return mk(call.lineno,
+                      "is re-read on the next loop iteration without "
+                      "being rebound")
+
+        # Straight-line code: any Load of the name after the statement,
+        # up to the next Store.
+        events = []
+        for n in ast.walk(fn):
+            if isinstance(n, ast.Name) and n.id == name and n is not arg:
+                events.append(n)
+        events.sort(key=lambda n: (n.lineno, n.col_offset))
+        end = getattr(stmt, "end_lineno", stmt.lineno)
+        for n in events:
+            if n.lineno <= end:
+                continue
+            if isinstance(n.ctx, ast.Store):
+                return None  # rebound before any read
+            if isinstance(n.ctx, ast.Load):
+                return mk(n.lineno, f"is read again at line {n.lineno}")
+        return None

@@ -1,0 +1,177 @@
+"""RA401 — hot-path purity.
+
+The scheduler's boundary callbacks, the admission policies, and the
+async server's worker loop run between every micro-run dispatch. A
+host sync (``block_until_ready``), a device transfer (``device_get`` /
+``device_put`` / ``np.asarray`` of a device array), or a fresh ``jnp``
+allocation there stalls the dispatch pipeline for every request in the
+batch. All device work belongs in the sanctioned dispatch path
+(``_dispatch`` / ``run``), not in the per-boundary host bookkeeping.
+
+Hot scopes are identified structurally, so fixtures and future code are
+covered without configuration:
+
+* every non-dunder method of ``AdmissionPolicy`` and its subclasses;
+* the boundary/bookkeeping methods of ``ContinuousScheduler`` and the
+  worker-loop methods of ``AsyncServeServer`` (by name);
+* any function or method assigned to an ``on_boundary`` /
+  ``on_tokens`` / ``on_shed`` hook attribute.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Set, Tuple
+
+from ..engine import Finding, Module, SourceTree
+from .. import astutil as A
+
+POLICY_BASE = "AdmissionPolicy"
+HOT_METHODS: Dict[str, Set[str]] = {
+    "ContinuousScheduler": {"_admit", "_free", "_now", "cancel",
+                            "drain_shed"},
+    "AsyncServeServer": {"_worker", "_drain_intake", "_apply",
+                         "_boundary_hook", "_emit_tokens",
+                         "_notify_shed", "_post", "_finish"},
+}
+HOOK_ATTRS = {"on_boundary", "on_tokens", "on_shed"}
+
+BANNED_EXACT = {
+    "jax.block_until_ready": "forces a host sync",
+    "jax.device_get": "forces a device->host transfer",
+    "jax.device_put": "forces a host->device transfer",
+    "np.asarray": "may force a device->host transfer",
+    "np.array": "may force a device->host transfer",
+    "numpy.asarray": "may force a device->host transfer",
+    "numpy.array": "may force a device->host transfer",
+    "time.sleep": "blocks the dispatch thread",
+}
+BANNED_PREFIXES = {
+    "jnp.": "allocates a fresh device array",
+    "jax.numpy.": "allocates a fresh device array",
+}
+
+
+class HotPathPurityRule:
+    id = "RA401"
+    name = "hot-path-purity"
+    rationale = ("boundary callbacks, admission policies, and the "
+                 "server worker loop run between every dispatch — a "
+                 "sync, transfer, or device allocation there stalls "
+                 "the whole batch")
+
+    def run(self, tree: SourceTree) -> List[Finding]:
+        findings: List[Finding] = []
+        for mod in tree:
+            for fn, why in self._hot_scopes(mod):
+                findings.extend(self._check(mod, fn, why))
+        return findings
+
+    # -- hot-scope discovery --------------------------------------------
+
+    def _hot_scopes(self, mod: Module) -> List[Tuple[ast.AST, str]]:
+        out: List[Tuple[ast.AST, str]] = []
+        seen: Set[int] = set()
+
+        def add(fn, why: str):
+            if isinstance(fn, A.FUNCTION_NODES) and id(fn) not in seen:
+                seen.add(id(fn))
+                out.append((fn, why))
+
+        classes = [n for n in ast.walk(mod.tree)
+                   if isinstance(n, ast.ClassDef)]
+        policy_like = self._policy_classes(classes)
+        methods_by_class: Dict[str, Dict[str, ast.AST]] = {}
+        for cls in classes:
+            methods = {s.name: s for s in cls.body
+                       if isinstance(s, A.FUNCTION_NODES)}
+            methods_by_class[cls.name] = methods
+            if cls.name in policy_like:
+                for name, m in methods.items():
+                    if not name.startswith("__"):
+                        add(m, f"{POLICY_BASE} method")
+            if cls.name in HOT_METHODS:
+                for name in HOT_METHODS[cls.name] & set(methods):
+                    add(methods[name], f"{cls.name} hot method")
+        # f assigned to a boundary hook attribute is a hot callback.
+        for node in ast.walk(mod.tree):
+            if not (isinstance(node, ast.Assign)
+                    and any(isinstance(t, ast.Attribute)
+                            and t.attr in HOOK_ATTRS
+                            for t in node.targets)):
+                continue
+            v = node.value
+            if isinstance(v, ast.Attribute) and isinstance(v.value,
+                                                           ast.Name) \
+                    and v.value.id == "self":
+                cls = A.enclosing(node, (ast.ClassDef,))
+                if isinstance(cls, ast.ClassDef):
+                    m = methods_by_class.get(cls.name, {}).get(v.attr)
+                    if m is not None:
+                        add(m, "boundary hook target")
+            elif isinstance(v, ast.Name):
+                target = self._resolve_local_def(node, v.id)
+                if target is not None:
+                    add(target, "boundary hook target")
+        return out
+
+    @staticmethod
+    def _policy_classes(classes: List[ast.ClassDef]) -> Set[str]:
+        """AdmissionPolicy plus everything that (transitively, within
+        this module) inherits from it."""
+        bases = {c.name: {A.dotted(b) or "" for b in c.bases}
+                 for c in classes}
+        hot = {c.name for c in classes
+               if c.name == POLICY_BASE
+               or any(b.split(".")[-1] == POLICY_BASE
+                      for b in bases[c.name])}
+        changed = True
+        while changed:
+            changed = False
+            for c in classes:
+                if c.name not in hot and any(
+                        b.split(".")[-1] in hot for b in bases[c.name]):
+                    hot.add(c.name)
+                    changed = True
+        return hot
+
+    @staticmethod
+    def _resolve_local_def(node: ast.AST, name: str):
+        for scope in A.parents(node):
+            if isinstance(scope, A.FUNCTION_NODES + (ast.Module,)):
+                for s in getattr(scope, "body", []):
+                    if isinstance(s, A.FUNCTION_NODES) and s.name == name:
+                        return s
+        return None
+
+    # -- the check ------------------------------------------------------
+
+    def _check(self, mod: Module, fn, why: str) -> List[Finding]:
+        findings: List[Finding] = []
+        qn = A.qualname(fn)
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            name = A.call_name(node)
+            reason = None
+            shown = name
+            if name in BANNED_EXACT:
+                reason = BANNED_EXACT[name]
+            elif name:
+                for prefix, r in BANNED_PREFIXES.items():
+                    if name.startswith(prefix):
+                        reason = r
+                        break
+            if reason is None and isinstance(node.func, ast.Attribute) \
+                    and node.func.attr == "block_until_ready":
+                reason = "forces a host sync"
+                shown = ".block_until_ready"
+            if reason is None:
+                continue
+            findings.append(Finding(
+                rule=self.id, file=mod.rel, line=node.lineno, symbol=qn,
+                key=f"impure:{qn}:{shown}",
+                message=(f"`{shown}` in hot path ({why}): {reason}; "
+                         f"device work belongs in the dispatch path, "
+                         f"not per-boundary bookkeeping")))
+        return findings

@@ -1,0 +1,155 @@
+"""RA501 — layering/altitude enforcement.
+
+Launchers, the batcher, and the benchmarks are thin ``repro.plan``
+clients: they describe *what* to run and let the plan pipeline decide
+meshes, shardings, step construction, and compilation. The moment a
+thin client builds a mesh, imports a step builder, or calls ``jax.jit``
+directly, the zero-post-warmup-lowerings counters stop seeing part of
+the compilation surface.
+
+Unlike the old grep test this rule works on the import graph: a
+``from repro.serve import X`` is resolved through package ``__init__``
+re-exports to the module that defines ``X``, so banned symbols cannot
+be laundered through a shim module.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Tuple
+
+from ..engine import Finding, Module, SourceTree
+from ..graph import ImportGraph
+from .. import astutil as A
+
+# Thin plan clients, matched by path suffix (fixture trees mirror the
+# same shape under tests/analysis_fixtures/).
+THIN_CLIENTS = (
+    "launch/train.py",
+    "launch/serve.py",
+    "launch/dryrun.py",
+    "serve/batcher.py",
+    "benchmarks/serve_latency.py",
+)
+
+# module (prefix) -> why a thin client must not import from it
+BANNED_MODULES: Dict[str, str] = {
+    "repro.dist.sharding": "sharding rules are resolved by the plan's "
+                           "ResolveSharding pass",
+    "repro.launch.mesh": "meshes are built by the plan's ResolveMesh pass",
+    "repro.launch.steps": "step builders are compiled by the plan's "
+                          "Compile pass via the ExecutableCache",
+    "repro.kernels": "kernels are an implementation detail of the layers",
+    "repro.layers": "layers are consumed through the models/plan, not "
+                    "directly",
+}
+
+# symbols banned regardless of which module re-exports them
+BANNED_SYMBOLS = {
+    "make_production_mesh", "make_debug_mesh", "rules_for_mode",
+    "specs_to_shardings", "make_train_step", "make_serve_step",
+    "make_prefill_step", "make_prefill_decode_step",
+    "make_masked_decode_step",
+}
+
+BANNED_CALLS = {
+    "jax.jit": "compiles outside the plan's ExecutableCache — invisible "
+               "to the zero-post-warmup-lowerings counters",
+    "jax.pjit": "compiles outside the plan's ExecutableCache",
+    "pjit": "compiles outside the plan's ExecutableCache",
+    "Mesh": "constructs a mesh outside the plan's ResolveMesh pass",
+    "jax.make_mesh": "constructs a mesh outside the plan's ResolveMesh "
+                     "pass",
+}
+
+
+def _banned_module(module: str) -> Optional[Tuple[str, str]]:
+    for prefix, why in BANNED_MODULES.items():
+        if module == prefix or module.startswith(prefix + "."):
+            return prefix, why
+    return None
+
+
+class LayeringRule:
+    id = "RA501"
+    name = "layering"
+    rationale = ("launchers, batcher, and benchmarks must stay thin "
+                 "repro.plan clients — compilation, mesh, and sharding "
+                 "decisions that bypass the plan escape its cache "
+                 "counters and its pass pipeline")
+
+    def run(self, tree: SourceTree) -> List[Finding]:
+        graph = ImportGraph(tree)
+        findings: List[Finding] = []
+        for mod in tree:
+            if not any(mod.rel.endswith(suffix)
+                       for suffix in THIN_CLIENTS):
+                continue
+            findings.extend(self._check_imports(mod, graph))
+            findings.extend(self._check_calls(mod))
+        return findings
+
+    def _check_imports(self, mod: Module,
+                       graph: ImportGraph) -> List[Finding]:
+        findings: List[Finding] = []
+        for edge in graph.imports_of(mod.modname):
+            if edge.name:  # from M import N — resolve re-exports
+                origin_mod, origin_name = graph.resolve(edge.module,
+                                                        edge.name)
+                hit = _banned_module(origin_mod)
+                laundered = origin_mod != edge.module
+                via = (f" (imported via {edge.module}, defined in "
+                       f"{origin_mod})") if laundered else ""
+                if hit is not None:
+                    findings.append(Finding(
+                        rule=self.id, file=mod.rel, line=edge.line,
+                        key=f"import:{origin_mod}:{origin_name}",
+                        message=(f"thin client imports `{origin_name}` "
+                                 f"from `{origin_mod}`{via}: {hit[1]}")))
+                elif origin_name in BANNED_SYMBOLS:
+                    findings.append(Finding(
+                        rule=self.id, file=mod.rel, line=edge.line,
+                        key=f"import-symbol:{origin_name}",
+                        message=(f"thin client imports plan-internal "
+                                 f"symbol `{origin_name}`{via} — go "
+                                 f"through repro.plan instead")))
+            else:  # import M
+                hit = _banned_module(edge.module)
+                if hit is not None:
+                    findings.append(Finding(
+                        rule=self.id, file=mod.rel, line=edge.line,
+                        key=f"import:{edge.module}",
+                        message=(f"thin client imports `{edge.module}`: "
+                                 f"{hit[1]}")))
+        return findings
+
+    def _check_calls(self, mod: Module) -> List[Finding]:
+        findings: List[Finding] = []
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            qn = A.qualname(node)
+            name = A.call_name(node)
+            if name in BANNED_CALLS:
+                findings.append(Finding(
+                    rule=self.id, file=mod.rel, line=node.lineno,
+                    symbol=qn, key=f"call:{name}:{qn}",
+                    message=(f"thin client calls `{name}`: "
+                             f"{BANNED_CALLS[name]}")))
+            elif name and name.split(".")[-1] in BANNED_SYMBOLS:
+                findings.append(Finding(
+                    rule=self.id, file=mod.rel, line=node.lineno,
+                    symbol=qn, key=f"call:{name.split('.')[-1]}:{qn}",
+                    message=(f"thin client calls plan-internal "
+                             f"`{name}` — executables come from "
+                             f"repro.plan")))
+            elif (isinstance(node.func, ast.Attribute)
+                  and node.func.attr == "lower"
+                  and not isinstance(node.func.value, ast.Constant)):
+                findings.append(Finding(
+                    rule=self.id, file=mod.rel, line=node.lineno,
+                    symbol=qn, key=f"call:.lower:{qn}",
+                    message=("thin client calls `.lower(...)` — direct "
+                             "lowering bypasses the plan's Compile "
+                             "pass and its cache counters")))
+        return findings

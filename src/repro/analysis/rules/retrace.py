@@ -1,0 +1,360 @@
+"""RA101 — retrace hazards inside traced functions.
+
+The runtime gate asserts zero post-warmup lowerings; this rule is its
+static complement. It identifies every function that jax traces —
+decorated with ``jax.jit``, passed to ``jax.jit(...)`` / ``jax.lax.scan``
+/ ``LoweringBundle(fn=...)`` — and flags the patterns that silently
+retrace or crash at trace time:
+
+* ``if``/``while``/``for`` whose condition/iterable depends on a traced
+  parameter (each distinct value retraces; data-dependent control flow
+  belongs in ``jnp.where`` / ``lax.cond`` / ``lax.scan``);
+* concretization of a traced value (``int``/``bool``/``float``/
+  ``.item()``) and host round-trips (``np.asarray``/``np.array``);
+* mutable closure capture: a traced body reading a list/dict/set that
+  the enclosing scope mutates — the trace freezes the value at trace
+  time and later mutations are silently ignored;
+* non-hashable static arguments: a list/dict/set literal passed at a
+  ``static_argnums`` position (TypeError at call time, or an unkeyed
+  trace if wrapped).
+
+Trace-static escapes are recognized and not flagged: ``x.shape`` /
+``x.ndim`` / ``x.dtype`` branching, ``is None`` checks, and anything
+listed in ``static_argnums``/``static_argnames``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple, Union
+
+from ..engine import Finding, Module, SourceTree
+from .. import astutil as A
+
+JIT_NAMES = {"jax.jit", "jit"}
+SCAN_NAMES = {"jax.lax.scan", "lax.scan", "scan"}
+PARTIAL_NAMES = {"functools.partial", "partial"}
+CONCRETIZE = {"bool", "int", "float"}
+HOST_ROUNDTRIP = {"np.asarray", "np.array", "numpy.asarray", "numpy.array",
+                  "jax.device_get"}
+MUTABLE_CTORS = {"list", "dict", "set", "collections.defaultdict",
+                 "defaultdict", "collections.deque", "deque"}
+MUTATORS = {"append", "extend", "add", "update", "insert", "setdefault",
+            "pop", "popleft", "appendleft", "remove", "clear"}
+
+FnNode = Union[ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda]
+
+
+def _is_jit_call(call: ast.Call) -> bool:
+    name = A.call_name(call)
+    if name in JIT_NAMES:
+        return True
+    # functools.partial(jax.jit, ...) used as a decorator factory
+    if name in PARTIAL_NAMES and call.args:
+        return A.dotted(call.args[0]) in JIT_NAMES
+    return False
+
+
+def _static_params(call: Optional[ast.Call], fn: FnNode) -> Set[str]:
+    """Parameter names excluded from tracing by static_arg{nums,names}."""
+    if call is None:
+        return set()
+    out: Set[str] = set()
+    params = A.param_names(fn)
+    nums_node = A.keyword_value(call, "static_argnums")
+    if nums_node is not None:
+        nums = A.const_index_set(nums_node)
+        if nums:
+            out |= {params[i] for i in nums if 0 <= i < len(params)}
+    names_node = A.keyword_value(call, "static_argnames")
+    if names_node is not None:
+        names = A.const_str_set(names_node)
+        if names:
+            out |= names
+    return out
+
+
+class _Traced:
+    def __init__(self, fn: FnNode, via: str,
+                 jit_call: Optional[ast.Call]):
+        self.fn = fn
+        self.via = via
+        self.statics = _static_params(jit_call, fn)
+
+
+def _local_defs(scope: ast.AST) -> Dict[str, FnNode]:
+    """Function defs declared directly in a scope's body."""
+    body = getattr(scope, "body", [])
+    if not isinstance(body, list):
+        return {}
+    return {s.name: s for s in body if isinstance(s, A.FUNCTION_NODES)}
+
+
+def _resolve_fn_ref(node: ast.AST) -> Optional[FnNode]:
+    """The function a reference points at: a lambda literal, or a def
+    with the same name in an enclosing scope."""
+    if isinstance(node, ast.Lambda):
+        return node
+    if not isinstance(node, ast.Name):
+        return None
+    for scope in A.parents(node):
+        if isinstance(scope, A.FUNCTION_NODES + (ast.Module,)):
+            defs = _local_defs(scope)
+            if node.id in defs:
+                return defs[node.id]
+    return None
+
+
+def _find_traced(mod: Module) -> List[_Traced]:
+    traced: Dict[int, _Traced] = {}
+
+    def add(fn: Optional[FnNode], via: str, call: Optional[ast.Call]):
+        if fn is not None and id(fn) not in traced:
+            traced[id(fn)] = _Traced(fn, via, call)
+
+    for node in ast.walk(mod.tree):
+        if isinstance(node, A.FUNCTION_NODES):
+            for dec in node.decorator_list:
+                if A.dotted(dec) in JIT_NAMES:
+                    add(node, "jit-decorator", None)
+                elif isinstance(dec, ast.Call) and _is_jit_call(dec):
+                    add(node, "jit-decorator", dec)
+        elif isinstance(node, ast.Call):
+            name = A.call_name(node)
+            if name in JIT_NAMES and node.args:
+                add(_resolve_fn_ref(node.args[0]), "jax.jit", node)
+            elif name in SCAN_NAMES and node.args:
+                add(_resolve_fn_ref(node.args[0]), "lax.scan", None)
+            elif name and name.split(".")[-1] == "LoweringBundle":
+                target = A.keyword_value(node, "fn")
+                if target is None and node.args:
+                    target = node.args[0]
+                if target is not None:
+                    add(_resolve_fn_ref(target), "LoweringBundle", None)
+    return list(traced.values())
+
+
+class RetraceHazardRule:
+    id = "RA101"
+    name = "retrace-hazard"
+    rationale = ("traced bodies must not branch on, concretize, or "
+                 "capture mutable host state — each violation retraces "
+                 "or silently freezes, defeating the zero-post-warmup-"
+                 "lowerings guarantee")
+
+    def run(self, tree: SourceTree) -> List[Finding]:
+        findings: List[Finding] = []
+        for mod in tree:
+            traced = _find_traced(mod)
+            traced_ids = {id(t.fn) for t in traced}
+            for t in traced:
+                findings.extend(self._check_fn(mod, t, traced_ids))
+            findings.extend(self._check_static_callsites(mod))
+        return findings
+
+    # -- per-function analysis ------------------------------------------
+
+    def _check_fn(self, mod: Module, t: _Traced,
+                  traced_ids: Set[int]) -> List[Finding]:
+        fn = t.fn
+        qn = A.qualname(fn)
+        findings: List[Finding] = []
+
+        tainted = set(A.param_names(fn)) - t.statics
+        # Parameters of enclosing traced functions are traced too when
+        # read through the closure (scan bodies nested in jitted fns).
+        for scope in A.parents(fn):
+            if id(scope) in traced_ids and not isinstance(scope, ast.Lambda):
+                tainted |= set(A.param_names(scope))
+
+        def refs(expr: ast.AST) -> Set[str]:
+            return A.references(expr, tainted, skip_static_attrs=True,
+                                skip_is_comparisons=True)
+
+        def emit(kind: str, line: int, names: Set[str], msg: str):
+            findings.append(Finding(
+                rule=self.id, file=mod.rel, line=line, message=msg,
+                symbol=qn,
+                key=f"{kind}:{qn}:{'+'.join(sorted(names)) or '-'}"))
+
+        def check_expr(expr: ast.AST):
+            for node in ast.walk(expr):
+                if not isinstance(node, ast.Call):
+                    continue
+                name = A.call_name(node)
+                hit = set()
+                for a in list(node.args) + [k.value for k in node.keywords]:
+                    hit |= refs(a)
+                if name in CONCRETIZE and hit:
+                    emit("concretize", node.lineno, hit,
+                         f"`{name}()` concretizes traced value(s) "
+                         f"{sorted(hit)} — forces a trace-time constant "
+                         f"or a ConcretizationTypeError")
+                elif name in HOST_ROUNDTRIP and hit:
+                    emit("host-roundtrip", node.lineno, hit,
+                         f"`{name}()` pulls traced value(s) {sorted(hit)} "
+                         f"to the host inside a traced body")
+                elif (isinstance(node.func, ast.Attribute)
+                      and node.func.attr == "item"
+                      and refs(node.func.value)):
+                    emit("concretize", node.lineno, refs(node.func.value),
+                         "`.item()` concretizes a traced value inside a "
+                         "traced body")
+
+        def walk_stmts(stmts: List[ast.stmt]):
+            for stmt in stmts:
+                if isinstance(stmt, (ast.Assign, ast.AugAssign,
+                                     ast.AnnAssign)):
+                    value = stmt.value
+                    if value is not None:
+                        check_expr(value)
+                        if refs(value):
+                            tainted.update(A.statement_bound_names(stmt))
+                elif isinstance(stmt, (ast.If, ast.While)):
+                    hit = refs(stmt.test)
+                    if hit:
+                        word = ("if" if isinstance(stmt, ast.If)
+                                else "while")
+                        emit("branch", stmt.lineno, hit,
+                             f"python `{word}` on traced value(s) "
+                             f"{sorted(hit)} — retraces per distinct "
+                             f"value; use jnp.where/lax.cond")
+                    check_expr(stmt.test)
+                    walk_stmts(stmt.body)
+                    walk_stmts(stmt.orelse)
+                elif isinstance(stmt, ast.For):
+                    hit = refs(stmt.iter)
+                    if hit:
+                        emit("loop", stmt.lineno, hit,
+                             f"python `for` over traced value(s) "
+                             f"{sorted(hit)} — unrolls/retraces per "
+                             f"shape; use lax.scan/fori_loop")
+                    check_expr(stmt.iter)
+                    if refs(stmt.iter):
+                        tainted.update(A.assigned_names(stmt.target))
+                    walk_stmts(stmt.body)
+                    walk_stmts(stmt.orelse)
+                elif isinstance(stmt, (ast.Return, ast.Expr)):
+                    if stmt.value is not None:
+                        check_expr(stmt.value)
+                elif isinstance(stmt, ast.With):
+                    walk_stmts(stmt.body)
+                elif isinstance(stmt, A.FUNCTION_NODES):
+                    pass  # nested defs analyzed separately if traced
+                elif isinstance(stmt, ast.Try):
+                    walk_stmts(stmt.body)
+                    for h in stmt.handlers:
+                        walk_stmts(h.body)
+                    walk_stmts(stmt.orelse)
+                    walk_stmts(stmt.finalbody)
+
+        if isinstance(fn, ast.Lambda):
+            check_expr(fn.body)  # lambdas are a single expression
+        else:
+            walk_stmts(fn.body)
+
+        findings.extend(self._check_mutable_closure(mod, t, qn))
+        return findings
+
+    # -- mutable closure capture ----------------------------------------
+
+    def _check_mutable_closure(self, mod: Module, t: _Traced,
+                               qn: str) -> List[Finding]:
+        fn = t.fn
+        encl = A.enclosing(fn, A.FUNCTION_NODES)
+        if encl is None:
+            return []
+        local = A.local_names(fn) if not isinstance(fn, ast.Lambda) \
+            else set(A.param_names(fn))
+        module_names = A.module_level_names(mod.tree)
+        body = fn.body if isinstance(fn.body, list) else [fn.body]
+        captured: Set[str] = set()
+        for stmt in body:
+            for node in ast.walk(stmt):  # type: ignore[arg-type]
+                if (isinstance(node, ast.Name)
+                        and isinstance(node.ctx, ast.Load)
+                        and node.id not in local
+                        and not A.is_builtin(node.id)
+                        and node.id not in module_names):
+                    captured.add(node.id)
+        if not captured:
+            return []
+
+        mutable_in_encl: Dict[str, int] = {}
+        mutated_in_encl: Set[str] = set()
+        for node in ast.walk(encl):
+            if node is fn or A.enclosing(node, A.FUNCTION_NODES) is not encl:
+                continue
+            if isinstance(node, ast.Assign):
+                v = node.value
+                is_mutable = isinstance(v, (ast.List, ast.Dict, ast.Set,
+                                            ast.ListComp, ast.DictComp,
+                                            ast.SetComp)) or (
+                    isinstance(v, ast.Call)
+                    and A.call_name(v) in MUTABLE_CTORS)
+                if is_mutable:
+                    for name in A.statement_bound_names(node):
+                        mutable_in_encl[name] = node.lineno
+            elif (isinstance(node, ast.Call)
+                  and isinstance(node.func, ast.Attribute)
+                  and node.func.attr in MUTATORS
+                  and isinstance(node.func.value, ast.Name)):
+                mutated_in_encl.add(node.func.value.id)
+            elif isinstance(node, (ast.Assign, ast.AugAssign)):
+                pass
+            elif isinstance(node, ast.Subscript) \
+                    and isinstance(node.ctx, (ast.Store, ast.Del)) \
+                    and isinstance(node.value, ast.Name):
+                mutated_in_encl.add(node.value.id)
+
+        out: List[Finding] = []
+        for name in sorted(captured & set(mutable_in_encl)
+                           & mutated_in_encl):
+            out.append(Finding(
+                rule=self.id, file=mod.rel,
+                line=getattr(fn, "lineno", 0),
+                symbol=qn, key=f"mutable-closure:{qn}:{name}",
+                message=(f"traced function captures mutable `{name}` "
+                         f"which the enclosing scope mutates — the trace "
+                         f"freezes its value; later mutations are "
+                         f"silently ignored")))
+        return out
+
+    # -- non-hashable static arguments at call sites --------------------
+
+    def _check_static_callsites(self, mod: Module) -> List[Finding]:
+        out: List[Finding] = []
+        # var -> static positions, from `v = jax.jit(f, static_argnums=...)`
+        static_vars: Dict[str, Set[int]] = {}
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Assign) and isinstance(node.value,
+                                                           ast.Call):
+                call = node.value
+                if A.call_name(call) in JIT_NAMES:
+                    nums_node = A.keyword_value(call, "static_argnums")
+                    nums = (A.const_index_set(nums_node)
+                            if nums_node is not None else None)
+                    if nums:
+                        for name in A.statement_bound_names(node):
+                            static_vars[name] = nums
+        if not static_vars:
+            return out
+        for node in ast.walk(mod.tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Name)
+                    and node.func.id in static_vars):
+                continue
+            qn = A.qualname(node)
+            for pos in static_vars[node.func.id]:
+                if pos < len(node.args) and isinstance(
+                        node.args[pos], (ast.List, ast.Dict, ast.Set)):
+                    out.append(Finding(
+                        rule=self.id, file=mod.rel, line=node.lineno,
+                        symbol=qn,
+                        key=(f"unhashable-static:{qn}:"
+                             f"{node.func.id}@{pos}"),
+                        message=(f"non-hashable literal at static "
+                                 f"position {pos} of `{node.func.id}` — "
+                                 f"static args key the trace cache and "
+                                 f"must be hashable")))
+        return out

@@ -57,6 +57,7 @@ class ExecutionPlan:
         self._model_cfg = None
         self._optimizer = None
         self._built_any = False
+        self._token_argmax_fns: Dict[Any, Any] = {}
 
     # -- resolved views -------------------------------------------------------
 
@@ -286,6 +287,25 @@ class ExecutionPlan:
                         paged=paged if paged is not None else ())
         self._built_any = True
         return self.cache.get_or_build(key, build)
+
+    def token_argmax(self, tok_sharding):
+        """The greedy token-selection helper, compiled by the plan.
+
+        Thin clients (the batcher's legacy dense path) must not call
+        ``jax.jit`` themselves — compilation outside the plan is
+        invisible to the cache's lowering counters, which is exactly
+        what the RA501 layering rule enforces. Cached per output
+        sharding, so repeat buckets on the same mesh reuse one
+        compilation.
+        """
+        fn = self._token_argmax_fns.get(tok_sharding)
+        if fn is None:
+            import jax.numpy as jnp
+
+            fn = jax.jit(lambda l: jnp.argmax(l, -1).astype(jnp.int32),
+                         out_shardings=tok_sharding)
+            self._token_argmax_fns[tok_sharding] = fn
+        return fn
 
     def make_batcher(self, policy=None, **kw):
         """A ServeBatcher whose executables all come from this plan."""

@@ -38,7 +38,6 @@ import time
 from typing import Deque, Dict, List, Optional, Sequence, Union
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
@@ -298,7 +297,6 @@ class ServeBatcher:
         self.metrics: Dict[str, BucketMetrics] = {}
         self._pending: Deque[DecodeRequest] = collections.deque()
         self._pending_ids: set = set()
-        self._argmax_fns: Dict[str, object] = {}
         # ids the scheduler's admission policy shed during the last run()
         # (EDF deadline misses): completed zero times, ids reusable
         self.last_shed: set = set()
@@ -461,14 +459,6 @@ class ServeBatcher:
             steps_per_dispatch=self.steps_per_dispatch
             if kind == "masked_decode" else 1, **kw)
 
-    def _argmax(self, bucket: Bucket, tok_sharding):
-        fn = self._argmax_fns.get(bucket.label)
-        if fn is None:
-            fn = jax.jit(lambda l: jnp.argmax(l, -1).astype(jnp.int32),
-                         out_shardings=tok_sharding)
-            self._argmax_fns[bucket.label] = fn
-        return fn
-
     def _dispatch(self, group: List[DecodeRequest],
                   bucket: Bucket) -> List[RequestResult]:
         t0 = time.perf_counter()
@@ -499,7 +489,7 @@ class ServeBatcher:
         steps = max(steps, 0)
         tok_sh = decode.bundle.in_shardings[2]
         pos_sh = decode.bundle.in_shardings[3]
-        argmax = self._argmax(bucket, tok_sh)
+        argmax = self.plan.token_argmax(tok_sh)
         last = jax.device_put(tok_out[:, -1], tok_sh)
         decoded = []
         for t in range(steps):

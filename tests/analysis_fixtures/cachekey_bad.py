@@ -1,0 +1,36 @@
+"""Known-bad fixture for RA201 (cachekey-completeness). Never imported.
+
+`fusion` shapes the compiled computation (it reaches the builder) but
+never reaches the cache key: two plans differing only in `fusion` would
+share one executable. The key method also passes a keyword that is not
+a CacheKey field.
+"""
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheKey:
+    arch: str
+    batch: int
+    steps: int = 1
+
+
+def make_fake_step(arch, batch, fusion):
+    return (arch, batch, fusion)
+
+
+class MiniPlan:
+    def __init__(self, arch, cache):
+        self.arch = arch
+        self.cache = cache
+
+    def _key(self, batch, steps=1, fusion=1):
+        # BUG: `fusion` is a parameter but never reaches CacheKey;
+        # BUG: `flavor` is not a CacheKey field.
+        return CacheKey(arch=self.arch, batch=batch, flavor=steps)
+
+    def serve_executable(self, batch, steps=1, fusion=1):
+        build = lambda: make_fake_step(self.arch, batch, fusion)  # noqa: E731
+        key = self._key(batch, steps=steps)  # BUG: fusion unkeyed
+        return self.cache.get_or_build(key, build)

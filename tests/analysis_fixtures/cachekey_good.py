@@ -1,0 +1,31 @@
+"""Known-good twin for RA201: every compile-affecting parameter flows
+through the key method into a CacheKey field. Never imported."""
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheKey:
+    arch: str
+    batch: int
+    steps: int = 1
+    fusion: int = 1
+
+
+def make_fake_step(arch, batch, fusion):
+    return (arch, batch, fusion)
+
+
+class MiniPlan:
+    def __init__(self, arch, cache):
+        self.arch = arch
+        self.cache = cache
+
+    def _key(self, batch, steps=1, fusion=1):
+        return CacheKey(arch=self.arch, batch=batch, steps=steps,
+                        fusion=fusion)
+
+    def serve_executable(self, batch, steps=1, fusion=1):
+        build = lambda: make_fake_step(self.arch, batch, fusion)  # noqa: E731
+        key = self._key(batch, steps=steps, fusion=fusion)
+        return self.cache.get_or_build(key, build)

@@ -1,0 +1,24 @@
+"""Known-bad fixture for RA301 (donation-safety). Never imported."""
+
+import jax
+import numpy as np
+
+
+def reads_donated_after_dispatch(exe, params, state, feed):
+    toks, new_state = exe.compiled(params, state, feed)
+    stale = np.asarray(state)    # RA301: donated buffer read after dispatch
+    return toks, new_state, stale
+
+
+def loop_never_rebinds(exe, params, state, feeds):
+    outs = []
+    for feed in feeds:
+        toks, _ = exe.compiled(params, state, feed)  # RA301: next iter
+        outs.append(toks)                            # re-reads donated state
+    return outs
+
+
+def local_jit_donation(x):
+    reset = jax.jit(lambda s: s * 0, donate_argnums=0)
+    y = reset(x)
+    return x + y                 # RA301: x was donated to `reset`

@@ -1,0 +1,23 @@
+"""Known-good twin for RA301: donated names are rebound in the dispatch
+assignment, per the repo convention. Never imported."""
+
+import jax
+
+
+def rebinds_donated(exe, params, state, feed):
+    toks, state = exe.compiled(params, state, feed)
+    return toks, state
+
+
+def loop_rebinds(exe, params, state, feeds):
+    outs = []
+    for feed in feeds:
+        toks, state = exe.compiled(params, state, feed)
+        outs.append(toks)
+    return outs, state
+
+
+def local_jit_rebind(x):
+    reset = jax.jit(lambda s: s * 0, donate_argnums=0)
+    x = reset(x)
+    return x

@@ -1,0 +1,41 @@
+"""Known-bad fixture for RA401 (hot-path-purity). Never imported.
+
+Class names mirror the real hot scopes (AdmissionPolicy subclass,
+ContinuousScheduler boundary method, AsyncServeServer worker method,
+boundary hook target) with a banned device op in each.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class AdmissionPolicy:
+    def select(self, pending, fits, now):
+        raise NotImplementedError
+
+
+class SyncingPolicy(AdmissionPolicy):
+    def select(self, pending, fits, now):
+        jax.block_until_ready(pending[0])   # RA401: sync per boundary
+        return pending[0]
+
+
+class ContinuousScheduler:
+    def _admit(self, pending, freed):
+        mask = jnp.zeros((len(freed),))     # RA401: device allocation
+        return mask
+
+
+class AsyncServeServer:
+    def _worker(self):
+        time.sleep(0.01)                    # RA401: blocks dispatch thread
+        return np.asarray(self._last)       # RA401: device fetch
+
+    def _install(self, sched):
+        sched.on_boundary = self._hook
+
+    def _hook(self, boundary):
+        jax.device_get(boundary)            # RA401: hook target transfer

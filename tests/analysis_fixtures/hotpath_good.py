@@ -1,0 +1,33 @@
+"""Known-good twin for RA401: the same scopes doing host-only
+bookkeeping. Never imported."""
+
+import collections
+
+
+class AdmissionPolicy:
+    def select(self, pending, fits, now):
+        raise NotImplementedError
+
+
+class FifoLikePolicy(AdmissionPolicy):
+    def select(self, pending, fits, now):
+        return [r for r in pending if fits(r)]
+
+
+class ContinuousScheduler:
+    def _admit(self, pending, freed):
+        taken = collections.deque()
+        for slot in freed:
+            if pending:
+                taken.append((slot, pending.pop(0)))
+        return taken
+
+
+class AsyncServeServer:
+    def _worker(self):
+        while self._live:
+            self._drain_intake()
+
+    def _drain_intake(self):
+        self._queue.extend(self._intake)
+        self._intake.clear()

@@ -1,0 +1,22 @@
+"""Known-bad fixture for RA501 (layering). Never imported.
+
+A launcher doing the plan's job: banned low-level imports (one
+laundered through the `wrappers` shim to prove re-export resolution),
+direct lowering, and out-of-plan compilation.
+"""
+
+import jax
+from repro.launch.steps import make_serve_step       # RA501: step builder
+from repro.dist.sharding import specs_to_shardings   # RA501: sharding wiring
+from wrappers import mode_rules                      # RA501: laundered
+
+from repro.models import SHAPES
+
+
+def main(cfg, mesh):
+    rules = mode_rules("cascade")
+    shardings = specs_to_shardings(SHAPES, mesh, rules)
+    bundle = make_serve_step(cfg, SHAPES["decode"], mesh, rules=rules)
+    exe = bundle.lower().compile()                   # RA501: direct lowering
+    argmax = jax.jit(lambda l: l.argmax(-1))         # RA501: out-of-plan jit
+    return exe, argmax, shardings

@@ -1,0 +1,7 @@
+"""Shim that launders a plan-internal symbol: importing `mode_rules`
+from here is still importing `rules_for_mode` from the banned
+`repro.dist.sharding` — RA501 resolves the re-export chain."""
+
+from repro.dist.sharding import rules_for_mode as mode_rules
+
+__all__ = ["mode_rules"]

@@ -1,0 +1,15 @@
+"""Known-good twin for RA501: a genuinely thin plan client. Never
+imported. Mirrors the real launcher's shape — config in, plan out,
+executables only via the plan."""
+
+from repro.configs import get_config
+from repro.models import SHAPES
+from repro.plan import ExecutionPlan
+
+
+def main(arch: str, bucket_batch: int, bucket_len: int):
+    cfg = get_config(arch)
+    plan = ExecutionPlan.for_serve(cfg, mode="cascade")
+    exe = plan.serve_executable(
+        "masked_decode", batch=bucket_batch, max_len=bucket_len)
+    return plan, exe, SHAPES

@@ -1,0 +1,44 @@
+"""Known-bad fixture for RA101 (retrace-hazard). Never imported."""
+
+import jax
+import numpy as np
+
+
+def make_bad_step():
+    stats = []  # mutable host state the traced body will capture
+
+    def step(x, limit):
+        if x > limit:                 # RA101 branch: python `if` on traced
+            x = x - limit
+        for i in range(int(x[0])):    # RA101 loop + concretize
+            x = x + i
+        return x + np.asarray(limit)  # RA101 host-roundtrip
+
+    stats.append("warm")              # mutation in the enclosing scope
+    return jax.jit(step), stats
+
+
+def scan_branch(xs):
+    def body(carry, x):
+        if x > 0:                     # RA101 branch inside a scan body
+            carry = carry + x
+        return carry, x
+
+    return jax.lax.scan(body, 0.0, xs)
+
+
+def uses_mutable_closure():
+    table = {}
+
+    def kernel(v):
+        return v * len(table)         # RA101 mutable-closure capture
+
+    table["k"] = 1
+    return jax.jit(kernel)
+
+
+sized = jax.jit(lambda v, cfg: v * len(cfg), static_argnums=1)
+
+
+def call_with_unhashable(v):
+    return sized(v, [1, 2, 3])        # RA101 unhashable static argument

@@ -1,0 +1,33 @@
+"""Known-good twin for RA101: the same shapes, expressed trace-safely.
+Never imported."""
+
+import jax
+import jax.numpy as jnp
+
+
+def make_good_step(n_inner: int, paged=None):
+    def step(x, limit):
+        x = jnp.where(x > limit, x - limit, x)   # data-dependence in-graph
+        if paged is not None:                    # trace-static closure config
+            x = x + 1
+        if x.ndim == 2:                          # shape branching is static
+            x = x.sum(-1)
+        for i in range(n_inner):                 # static trip count
+            x = x + i
+        return x
+
+    return jax.jit(step)
+
+
+def scan_where(xs):
+    def body(carry, x):
+        return carry + jnp.where(x > 0, x, 0.0), x
+
+    return jax.lax.scan(body, 0.0, xs)
+
+
+sized = jax.jit(lambda v, cfg: v * len(cfg), static_argnums=1)
+
+
+def call_with_hashable(v):
+    return sized(v, (1, 2, 3))                   # tuple statics hash fine

@@ -1,0 +1,293 @@
+"""``repro.analysis``: the static-analysis suite itself.
+
+Acceptance properties pinned here:
+
+* every rule has a known-bad fixture that produces findings with the
+  right rule id and a known-good twin that is clean — the proof that a
+  real violation turns the CI ``static-analysis`` job red;
+* the CacheKey-completeness rule fails when a synthetic
+  compile-affecting kwarg is injected into the *real*
+  ``ExecutionPlan.serve_executable`` without a matching key field
+  (the issue's acceptance demo for the rule);
+* the shipped tree is clean: ``analyze(src/repro, benchmarks)`` with
+  the repo baseline reports zero unbaselined findings and zero
+  baseline hygiene errors;
+* baseline round-trip: finding -> baseline entry -> clean run ->
+  remove entry -> red again; entries without justification and stale
+  entries are hard errors;
+* the CLI exits 0/1 correctly and ``--json`` emits the shared report
+  shape that ``scripts/check_docs.py --json`` also produces.
+
+The suite is jax-free on purpose — the analyzer must work in a bare
+interpreter, and these tests prove it by never importing jax.
+"""
+
+import json
+import os
+import re
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import (
+    ALL_RULES,
+    Baseline,
+    analyze,
+    write_baseline,
+)
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+SRC_REPRO = os.path.join(ROOT, "src", "repro")
+BENCHMARKS = os.path.join(ROOT, "benchmarks")
+FIXTURES = os.path.join(os.path.dirname(__file__), "analysis_fixtures")
+REPO_BASELINE = os.path.join(ROOT, "analysis_baseline.json")
+
+RULE_FIXTURES = {
+    "RA101": ("retrace_bad.py", "retrace_good.py"),
+    "RA201": ("cachekey_bad.py", "cachekey_good.py"),
+    "RA301": ("donation_bad.py", "donation_good.py"),
+    "RA401": ("hotpath_bad.py", "hotpath_good.py"),
+    "RA501": ("layering_bad", "layering_good"),
+}
+
+
+def run_rule(rule_id, target):
+    return analyze([os.path.join(FIXTURES, target)],
+                   rules=[rule_id], baseline=None)
+
+
+# ---------------------------------------------------------------------------
+# ACCEPTANCE: every rule flags its bad fixture and passes its good twin
+# ---------------------------------------------------------------------------
+
+
+def test_every_registered_rule_has_a_fixture():
+    assert {r.id for r in ALL_RULES} == set(RULE_FIXTURES), (
+        "new rules must ship a bad/good fixture pair")
+
+
+@pytest.mark.parametrize("rule_id", sorted(RULE_FIXTURES))
+def test_bad_fixture_turns_red(rule_id):
+    bad, _ = RULE_FIXTURES[rule_id]
+    report = run_rule(rule_id, bad)
+    assert report.findings, f"{bad} must produce {rule_id} findings"
+    assert {f.rule for f in report.findings} == {rule_id}
+    assert all(f.line > 0 and f.file for f in report.findings)
+    assert not report.ok  # this is exactly what fails the CI job
+
+
+@pytest.mark.parametrize("rule_id", sorted(RULE_FIXTURES))
+def test_good_twin_is_clean(rule_id):
+    _, good = RULE_FIXTURES[rule_id]
+    report = run_rule(rule_id, good)
+    assert not report.findings, "\n".join(
+        f.render() for f in report.findings)
+    assert report.ok
+
+
+def test_retrace_finding_kinds():
+    report = run_rule("RA101", "retrace_bad.py")
+    kinds = {f.key.split(":")[0] for f in report.findings}
+    assert {"branch", "loop", "concretize", "host-roundtrip",
+            "mutable-closure", "unhashable-static"} <= kinds
+
+
+def test_layering_resolves_laundered_reexport():
+    report = run_rule("RA501", "layering_bad")
+    laundered = [f for f in report.findings
+                 if "imported via wrappers" in f.message]
+    assert laundered, ("the wrappers shim must not hide "
+                       "repro.dist.sharding from the import graph")
+    assert "rules_for_mode" in laundered[0].message
+
+
+def test_donation_flags_loop_and_straightline_reads():
+    report = run_rule("RA301", "donation_bad.py")
+    messages = " | ".join(f.message for f in report.findings)
+    assert "next loop iteration" in messages
+    assert "read again at line" in messages
+
+
+# ---------------------------------------------------------------------------
+# ACCEPTANCE: synthetic compile-affecting kwarg in the REAL plan is caught
+# ---------------------------------------------------------------------------
+
+
+def test_cachekey_rule_catches_synthetic_kwarg_in_real_plan(tmp_path):
+    """Inject `fusion_mode` into the real ExecutionPlan.serve_executable:
+    consumed by the masked_decode builder, never passed to _key. The
+    rule must fail — this is how the next `steps`/`paged` can't be
+    forgotten."""
+    plan_src = open(os.path.join(SRC_REPRO, "plan", "plan.py")).read()
+    patched = plan_src.replace(
+        "def serve_executable(self, kind: str, *, batch: int, "
+        "max_len: int,",
+        "def serve_executable(self, kind: str, *, batch: int, "
+        "max_len: int,\n                         fusion_mode: int = 0,")
+    patched = patched.replace(
+        "steps_per_dispatch=steps_per_dispatch, paged=paged)",
+        "steps_per_dispatch=steps_per_dispatch + fusion_mode, "
+        "paged=paged)")
+    assert patched != plan_src, "plan.py drifted; update the patch anchors"
+    work = tmp_path / "plan"
+    work.mkdir()
+    (work / "plan.py").write_text(patched)
+    cache_src = open(os.path.join(SRC_REPRO, "serve", "cache.py")).read()
+    (work / "cache.py").write_text(cache_src)
+
+    report = analyze([str(work)], rules=["RA201"], baseline=None)
+    hits = [f for f in report.findings if "fusion_mode" in f.message]
+    assert hits, "unkeyed synthetic kwarg must produce an RA201 finding"
+    assert hits[0].key.startswith("unkeyed-param:ExecutionPlan."
+                                  "serve_executable")
+
+    # control: the unpatched pair is clean
+    clean = tmp_path / "clean"
+    clean.mkdir()
+    (clean / "plan.py").write_text(plan_src)
+    (clean / "cache.py").write_text(cache_src)
+    assert analyze([str(clean)], rules=["RA201"], baseline=None).ok
+
+
+# ---------------------------------------------------------------------------
+# ACCEPTANCE: the shipped tree is clean under the repo baseline
+# ---------------------------------------------------------------------------
+
+
+def test_shipped_tree_has_no_unbaselined_findings():
+    report = analyze([SRC_REPRO, BENCHMARKS], baseline=REPO_BASELINE)
+    assert not report.findings, "\n".join(
+        f.render() for f in report.findings)
+    assert not report.errors, "\n".join(report.errors)
+    assert report.files > 80, "scan roots look wrong"
+
+
+def test_repo_baseline_entries_all_justified():
+    base = Baseline.load(REPO_BASELINE)
+    assert not base.load_errors, "\n".join(base.load_errors)
+    for entry in base.entries:
+        assert len(entry["justification"].strip()) >= 10, (
+            f"{entry['ident']}: a justification must actually say why")
+
+
+# ---------------------------------------------------------------------------
+# baseline round-trip: finding -> baseline -> clean -> remove -> red
+# ---------------------------------------------------------------------------
+
+BAD_SNIPPET = '''
+import jax
+
+
+class AdmissionPolicy:
+    def select(self, pending, fits, now):
+        jax.block_until_ready(pending)
+        return pending
+'''
+
+
+def test_baseline_round_trip(tmp_path):
+    mod = tmp_path / "policy.py"
+    mod.write_text(BAD_SNIPPET)
+    base = tmp_path / "baseline.json"
+
+    red = analyze([str(mod)], baseline=None)
+    assert len(red.findings) == 1 and red.findings[0].rule == "RA401"
+
+    write_baseline(base, red.findings, "fixture: sync sanctioned here")
+    green = analyze([str(mod)], baseline=base)
+    assert green.ok and len(green.baselined) == 1
+
+    base.unlink()
+    red_again = analyze([str(mod)], baseline=base)  # missing file = empty
+    assert not red_again.ok and len(red_again.findings) == 1
+
+    # idents are line-number free: shifting the code keeps the baseline
+    write_baseline(base, red.findings, "fixture: sync sanctioned here")
+    mod.write_text("# a new leading comment line\n" + BAD_SNIPPET)
+    shifted = analyze([str(mod)], baseline=base)
+    assert shifted.ok and len(shifted.baselined) == 1
+
+
+def test_baseline_hygiene_errors(tmp_path):
+    mod = tmp_path / "policy.py"
+    mod.write_text(BAD_SNIPPET)
+
+    unjustified = tmp_path / "unjustified.json"
+    unjustified.write_text(json.dumps({
+        "version": 1,
+        "suppressions": [{"ident": "RA401:whatever", "justification": ""}],
+    }))
+    report = analyze([str(mod)], baseline=unjustified)
+    assert any("no justification" in e for e in report.errors)
+
+    stale = tmp_path / "stale.json"
+    stale.write_text(json.dumps({
+        "version": 1,
+        "suppressions": [{"ident": "RA401:nonexistent:thing",
+                          "justification": "was real once, code moved"}],
+    }))
+    report = analyze([str(mod)], baseline=stale)
+    assert any("stale suppression" in e for e in report.errors)
+    assert not report.ok, "a stale baseline must fail CI, not pass it"
+
+
+# ---------------------------------------------------------------------------
+# CLI + shared JSON report shape
+# ---------------------------------------------------------------------------
+
+
+def _run_cli(args, cwd=ROOT):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        cwd=cwd, env=env, capture_output=True, text=True)
+
+
+def _assert_report_shape(data, tool):
+    assert data["tool"] == tool
+    assert isinstance(data["ok"], bool)
+    assert set(data["counts"]) >= {"files", "findings"}
+    for f in data["findings"]:
+        assert set(f) >= {"rule", "file", "line", "message"}
+
+
+def test_cli_red_on_fixture_and_json_report(tmp_path):
+    out = tmp_path / "report.json"
+    proc = _run_cli([os.path.join(FIXTURES, "hotpath_bad.py"),
+                     "--no-baseline", "--json", str(out)])
+    assert proc.returncode == 1, proc.stdout + proc.stderr
+    assert re.search(r"hotpath_bad\.py:\d+: RA401", proc.stdout)
+    data = json.loads(out.read_text())
+    _assert_report_shape(data, "repro.analysis")
+    assert not data["ok"] and data["counts"]["findings"] >= 1
+
+
+def test_cli_green_on_shipped_tree():
+    proc = _run_cli(["src/repro", "benchmarks"])
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "repro.analysis: OK" in proc.stdout
+
+
+def test_cli_rule_filter_and_list():
+    proc = _run_cli(["--list-rules"])
+    assert proc.returncode == 0
+    for rule in ALL_RULES:
+        assert rule.id in proc.stdout
+    proc = _run_cli([os.path.join(FIXTURES, "hotpath_bad.py"),
+                     "--no-baseline", "--rules", "RA501"])
+    assert proc.returncode == 0, "RA501 alone must not flag hotpath_bad"
+
+
+def test_check_docs_json_shares_report_shape(tmp_path):
+    out = tmp_path / "docs_report.json"
+    proc = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "scripts", "check_docs.py"),
+         "--json", str(out)],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    data = json.loads(out.read_text())
+    _assert_report_shape(data, "scripts.check_docs")
+    assert data["ok"]
