@@ -29,16 +29,34 @@ request id to the dense FIFO ground truth — paging runs every request
 at local positions 0..n exactly like a fresh fifo slot, so it is a
 memory-layout change, not a model change (see docs/memory_model.md).
 
+The ``speculative`` section races speculative lanes (a 1-layer draft
+prefix proposes k=8 tokens per dispatch, the 4-layer target verifies
+them in one fused teacher-forced pass) against plain continuous decode
+at the SAME ``steps_per_dispatch`` — the matching k-sweep point — on
+params doctored so every post-draft block is a residual no-op (zero
+attention out-projection and FFN down-projection). Near-perfect draft
+agreement isolates the headline: **accepted tokens per dispatch** (CI
+asserts > 1, i.e. the draft actually amortizes dispatches) and spec
+tok/s >= baseline tok/s at zero post-warmup lowerings. Token COUNTS are
+asserted equal; bit-exact per-request stream parity with plain decode
+lives in ``tests/test_speculative.py`` on curated gap-robust traces.
+
 The ``traffic`` section replays ONE seeded Poisson trace (heavy-tailed
 lengths, priority classes, per-request deadlines — ``repro.serve.
 traffic``) through each admission policy in **virtual time**: arrivals
 are injected at micro-run boundaries with the scheduler's own step
 counter as the clock, so TTFT and goodput-under-deadline (fraction of
 all arrivals whose last token lands before their deadline) are
-bit-deterministic and CI-gateable. The headline is
-``goodput_edf_minus_fifo`` (CI asserts >= 0: shedding already-expired
-requests and running the tightest deadline first must not lose to
-arrival order under the same overload). An ``async`` subsection replays
+bit-deterministic and CI-gateable. Every policy replays the trace twice
+— dense slabs and the shared page pool (half the arrivals open with the
+trace's one-page system prompt) — and CI asserts each paged replay hits
+the prefix cache AND loses no goodput (prefix hits skip prefill steps,
+so shared-prefix requests finish earlier in virtual time; on this
+overloaded trace the paged goodput gain is the memory-model paying rent
+on the latency axis too). The headline is ``goodput_edf_minus_fifo``
+(CI asserts >= 0: shedding already-expired requests and running the
+tightest deadline first must not lose to arrival order under the same
+overload). An ``async`` subsection replays
 a second trace with abandonment through the real
 :class:`~repro.serve.server.AsyncServeServer` in scaled wall-clock time
 and records client-side p50/p99 TTFT and outcome counts.
@@ -325,16 +343,153 @@ def measure_paged(waves: int = 3) -> dict:
     return out
 
 
+# speculative section: a 1-layer draft prefix proposes SPEC_K tokens per
+# dispatch and the full SPEC_LAYERS-layer target verifies them in ONE
+# teacher-forced block pass. The params are doctored so every post-draft
+# block contributes nothing to the residual stream (zero attention
+# out-projection + zero FFN down-projection): the draft then agrees with
+# the target almost everywhere, which isolates the DISPATCH-amortization
+# headline — accepted tokens per dispatch — from model-quality noise.
+# The baseline is plain continuous decode at the SAME steps_per_dispatch
+# on the SAME doctored params and trace (the matching k-sweep point), so
+# the tok/s ratio measures exactly what speculation buys: k sequential
+# full-model steps traded for k draft steps plus one fused verify.
+SPEC_LAYERS = 4
+SPEC_DRAFT_LAYERS = 1
+SPEC_K = 8
+SPEC_REQUESTS = 12                  # per wave
+SPEC_TOKENS = 12                    # generated per request
+
+
+def spec_requests(tag: str, n: int = SPEC_REQUESTS):
+    # gap-robust prompts (the tests/test_speculative.py family): every
+    # decode step's top-2 logit gap clears float-reassociation noise, so
+    # draft/target agreement is a model fact, not a tie accident
+    reqs = []
+    for i in range(n):
+        plen = 2 + i % 3
+        reqs.append(DecodeRequest(
+            f"{tag}-{i}", [2 + (7 * i + 13 * j) % 50 for j in range(plen)],
+            max_new_tokens=SPEC_TOKENS))
+    return reqs
+
+
+def _doctored_draft_params(plan):
+    """Demo params whose layers >= SPEC_DRAFT_LAYERS are residual no-ops.
+
+    Zeroing a block's attention out-projection and FFN down-projection
+    zeroes both of its residual deltas, so the stream leaving the last
+    draft layer IS the stream entering the final norm — the draft prefix
+    computes exactly the target's logits (up to reassociation), and
+    acceptance measures the lane machinery, not model agreement.
+    """
+    import jax
+
+    params = plan.init_params(0)
+
+    def zero_tail(tree):
+        return jax.tree_util.tree_map(
+            lambda w: w.at[SPEC_DRAFT_LAYERS:].set(0), tree)
+
+    blocks = dict(params["blocks"])
+    blocks["attn"] = dict(blocks["attn"],
+                          wo=zero_tail(blocks["attn"]["wo"]))
+    blocks["ffn"] = dict(blocks["ffn"],
+                         down=zero_tail(blocks["ffn"]["down"]))
+    return dict(params, blocks=blocks)
+
+
+SPEC_CONFIGS = (
+    ("baseline", dict(schedule="continuous", steps_per_dispatch=SPEC_K)),
+    ("speculative", dict(schedule="continuous", steps_per_dispatch=SPEC_K,
+                         speculative=SPEC_K,
+                         draft=f"prefix:{SPEC_DRAFT_LAYERS}")),
+)
+
+
+def measure_speculative(waves: int = 3) -> dict:
+    """Race plain continuous k=SPEC_K vs speculative lanes, same trace."""
+    cfg = reduced_config(ARCH).with_(n_layers=SPEC_LAYERS, vocab=64)
+    policy = BucketPolicy([Bucket(CHURN_MAX_LEN, CHURN_BATCH)])
+    out = {}
+    token_counts = {}
+    for label, kw in SPEC_CONFIGS:
+        plan = build_plan(cfg, None, mesh_spec=MeshSpec.debug(1, 1))
+        with plan.activate():
+            b = plan.make_batcher(policy=policy, **kw)
+            b.load_params(_doctored_draft_params(plan))
+            for r in spec_requests("cold"):
+                b.submit(r)
+            b.run()                    # compile + warm the bucket
+            warm_cache = dict(b.cache.stats())
+            cold_spec = dict(b.scheduler.stats().get("spec", {}))
+            b.metrics = {}
+            t0 = time.perf_counter()
+            tokens = 0
+            for w in range(waves):
+                for r in spec_requests(f"warm{w}"):
+                    b.submit(r)
+                res = b.run()
+                tokens += sum(len(r.tokens) for r in res.values())
+            dt = time.perf_counter() - t0
+        after = b.cache.stats()
+        token_counts[label] = tokens
+        entry = {
+            "tokens": tokens,
+            "seconds": round(dt, 4),
+            "tokens_per_second": round(tokens / dt, 2) if dt else 0.0,
+            "new_lowerings_after_warmup":
+                after["lowerings"] - warm_cache["lowerings"],
+        }
+        if label == "speculative":
+            s = b.scheduler.stats()["spec"]
+            # warm-only, like every sibling field: subtract the cold wave
+            verifies = s["verifies"] - cold_spec["verifies"]
+            accepted = s["accepted_tokens"] - cold_spec["accepted_tokens"]
+            drafted = s["draft_tokens"] - cold_spec["draft_tokens"]
+            entry["spec"] = {
+                "spec_k": s["spec_k"],
+                "draft_layers": s["draft_layers"],
+                "verifies": verifies,
+                "draft_tokens": drafted,
+                "accepted_tokens": accepted,
+                "rollbacks": s["rollbacks"] - cold_spec["rollbacks"],
+                "acceptance_rate": round(accepted / drafted, 4)
+                if drafted else 0.0,
+                "accepted_tokens_per_dispatch": round(accepted / verifies, 3)
+                if verifies else 0.0,
+            }
+        out[label] = entry
+    # count parity only: exact stream parity is pinned per request id by
+    # tests/test_speculative.py on curated traces; the benchmark keeps
+    # the cheap invariant that speculation never changes how much work
+    # the trace represents
+    assert token_counts["speculative"] == token_counts["baseline"], (
+        "speculative decode generated a different token count than plain "
+        f"continuous on the same trace: {token_counts}")
+    out["tokens_match"] = True
+    out["accepted_tokens_per_dispatch"] = \
+        out["speculative"]["spec"]["accepted_tokens_per_dispatch"]
+    out["speedup_spec_vs_baseline"] = round(
+        out["speculative"]["tokens_per_second"]
+        / out["baseline"]["tokens_per_second"], 3) \
+        if out["baseline"]["tokens_per_second"] else 0.0
+    return out
+
+
 # traffic section: one overloaded Poisson trace (arrival rate ~2x the
 # bucket's service capacity) so admission order actually matters, replayed
-# per policy in virtual time; a second, lighter trace with abandonment
-# drives the async wall-clock subsection
+# per policy in virtual time — on dense state AND again through the shared
+# page pool (half the arrivals open with the trace's 16-token system
+# prompt, one page, so paged replays hit the prefix cache); a second,
+# lighter trace with abandonment drives the async wall-clock subsection
 TRAFFIC_SEED = 7
 TRAFFIC_N = 48
 TRAFFIC_K = 4                       # steps_per_dispatch for all replays
 TRAFFIC_POLICIES = ("fifo", "priority", "edf")
 TRAFFIC_SPEC = TrafficSpec(rate=2.0, max_prompt=12, max_new_tokens=12,
-                           deadline_slack=(1.2, 3.5))
+                           deadline_slack=(1.2, 3.5),
+                           shared_prefix_len=16, shared_prefix_prob=0.5)
 ASYNC_SPEC = TrafficSpec(rate=2.0, max_prompt=12, max_new_tokens=12,
                          deadline_prob=0.0, abandon_prob=0.3,
                          patience_mean=8.0)
@@ -347,7 +502,7 @@ def _pct(vals, p):
     return round(v[min(len(v) - 1, int(p * len(v)))], 3) if v else 0.0
 
 
-def _traffic_batcher(admission_name=None):
+def _traffic_batcher(admission_name=None, paged: bool = False):
     """Fresh warm continuous batcher on the churn bucket; returns it plus
     the post-warmup lowering count (the zero-lowerings baseline)."""
     cfg = reduced_config(ARCH).with_(n_layers=2, vocab=64)
@@ -357,7 +512,7 @@ def _traffic_batcher(admission_name=None):
     with plan.activate():
         b = plan.make_batcher(policy=policy, schedule="continuous",
                               steps_per_dispatch=TRAFFIC_K,
-                              admission=admission)
+                              admission=admission, paged=paged)
         b.init_demo_params(seed=0)
         for i in range(2):
             b.submit(DecodeRequest(f"warm{i}", [1, 2, 3],
@@ -367,7 +522,8 @@ def _traffic_batcher(admission_name=None):
     return b, b.cache.stats()["lowerings"]
 
 
-def _replay_virtual(trace, admission_name: str) -> dict:
+def _replay_virtual(trace, admission_name: str,
+                    paged: bool = False) -> dict:
     """Replay one arrival trace under one policy, virtual time.
 
     The clock is the scheduler's global step counter: the ``on_boundary``
@@ -382,7 +538,7 @@ def _replay_virtual(trace, admission_name: str) -> dict:
             for tr in trace}
     first_tick, done_tick = {}, {}
     got = collections.defaultdict(int)
-    b, warm_lowerings = _traffic_batcher(admission_name)
+    b, warm_lowerings = _traffic_batcher(admission_name, paged=paged)
     sched = b.scheduler
     idx = 0
 
@@ -428,7 +584,7 @@ def _replay_virtual(trace, admission_name: str) -> dict:
                 good += 1
             else:
                 late += 1
-    return {
+    out = {
         "requests": len(trace),
         "completed": len(done_tick),
         "shed": len(shed),
@@ -440,6 +596,15 @@ def _replay_virtual(trace, admission_name: str) -> dict:
         "new_lowerings_after_warmup":
             b.cache.stats()["lowerings"] - warm_lowerings,
     }
+    if paged:
+        a = b.stats()["paged"]
+        out["allocator"] = {
+            "prefix_hits": a["prefix_hits"],
+            "skipped_prefill_tokens": a["skipped_prefill_tokens"],
+            "prefill_skip_rate": a["prefill_skip_rate"],
+            "peak_pages": a["peak_pages"],
+        }
+    return out
 
 
 def _measure_async(trace) -> dict:
@@ -503,14 +668,27 @@ def _measure_async(trace) -> dict:
 
 
 def measure_traffic() -> dict:
-    """Admission-policy shoot-out on one seeded trace + async replay."""
+    """Admission-policy shoot-out on one seeded trace + async replay.
+
+    Every policy replays the SAME trace twice: dense slabs and the shared
+    page pool. Prefix-cache hits on the trace's shared system prompt skip
+    those prefill steps, so paged replays finish shared-prefix requests
+    EARLIER in virtual time — goodput under deadline must not get worse
+    (gated below), and on an overloaded trace it visibly improves.
+    """
     trace = generate_traffic(TRAFFIC_SPEC, TRAFFIC_N, TRAFFIC_SEED)
     out = {
         "spec": dataclasses.asdict(TRAFFIC_SPEC),
         "load": summarize(trace),
         "policies": {name: _replay_virtual(trace, name)
                      for name in TRAFFIC_POLICIES},
+        "policies_paged": {name: _replay_virtual(trace, name, paged=True)
+                           for name in TRAFFIC_POLICIES},
     }
+    out["goodput_paged_minus_dense"] = {
+        n: round(out["policies_paged"][n]["goodput"]
+                 - out["policies"][n]["goodput"], 4)
+        for n in TRAFFIC_POLICIES}
     out["goodput_edf_minus_fifo"] = round(
         out["policies"]["edf"]["goodput"]
         - out["policies"]["fifo"]["goodput"], 4)
@@ -563,6 +741,7 @@ def measure(waves: int = WAVES, tokens: int = TOKENS,
         "pool": stats["pool"],
         "churn": measure_churn(),
         "paged": measure_paged(),
+        "speculative": measure_speculative(),
     }
     if traffic:
         out["traffic"] = measure_traffic()
@@ -609,6 +788,31 @@ def _report_paged(paged: dict) -> None:
         "slabs on a shared-prefix mix — paging lost its reason to exist")
 
 
+def _report_speculative(spec: dict) -> None:
+    """Print + gate the speculative section (shared by --only speculative)."""
+    for label, _ in SPEC_CONFIGS:
+        p = spec[label]
+        print(f"speculative/{label}: {p['tokens_per_second']} tok/s "
+              f"({p['tokens']} tokens in {p['seconds']}s)")
+        assert p["new_lowerings_after_warmup"] == 0, \
+            f"speculative/{label} lowered after warmup"
+    s = spec["speculative"]["spec"]
+    print(f"speculative: {s['accepted_tokens_per_dispatch']} accepted "
+          f"tokens/dispatch at k={s['spec_k']} (gate: > 1), acceptance "
+          f"rate {s['acceptance_rate']} over {s['draft_tokens']} drafts "
+          f"({s['rollbacks']} rollbacks), speedup vs plain k={SPEC_K} "
+          f"continuous: {spec['speedup_spec_vs_baseline']}x (gate: >= 1)")
+    assert spec["tokens_match"]
+    assert spec["accepted_tokens_per_dispatch"] > 1.0, (
+        "speculative lanes committed <= 1 token per dispatch — the draft "
+        "is not amortizing anything, so the fused scan is pure overhead")
+    assert spec["speedup_spec_vs_baseline"] >= 1.0, (
+        "speculative decode was SLOWER than plain continuous at the same "
+        "steps_per_dispatch on a draft-friendly model — k draft steps + "
+        "one fused verify must beat k full-model steps when acceptance "
+        "is near-perfect")
+
+
 def _report_traffic(traffic: dict) -> None:
     """Print + gate the traffic section (shared by --only traffic)."""
     for name in TRAFFIC_POLICIES:
@@ -625,6 +829,23 @@ def _report_traffic(traffic: dict) -> None:
     assert traffic["goodput_edf_minus_fifo"] >= 0, (
         "EDF admission lost goodput-under-deadline to FIFO on the same "
         "trace — shedding expired requests must not hurt")
+    for name in TRAFFIC_POLICIES:
+        p = traffic["policies_paged"][name]
+        a = p["allocator"]
+        print(f"traffic/{name}+paged: goodput {p['goodput']} "
+              f"(+{traffic['goodput_paged_minus_dense'][name]} vs dense), "
+              f"{a['prefix_hits']} prefix hits, skip rate "
+              f"{round(a['prefill_skip_rate'], 3)}, "
+              f"peak pages {a['peak_pages']}")
+        assert p["new_lowerings_after_warmup"] == 0, \
+            f"traffic/{name}+paged lowered after warmup"
+        assert a["prefix_hits"] > 0, (
+            f"traffic/{name}+paged saw no prefix-cache hits on a trace "
+            "where half the arrivals share a one-page system prompt")
+        assert traffic["goodput_paged_minus_dense"][name] >= 0, (
+            f"traffic/{name}+paged LOST goodput vs dense on the same "
+            "trace — prefix reuse skips prefill steps, so shared-prefix "
+            "requests must finish no later than their dense replays")
     a = traffic["async"]
     print(f"traffic/async: p50 TTFT {a['p50_ttft_s']}s, "
           f"p99 {a['p99_ttft_s']}s, outcomes {a['client_outcomes']}, "
@@ -640,11 +861,21 @@ def main():
     ap.add_argument("--waves", type=int, default=WAVES)
     ap.add_argument("--tokens", type=int, default=TOKENS)
     ap.add_argument("--only", default="all",
-                    choices=["all", "traffic", "paged"],
+                    choices=["all", "traffic", "paged", "speculative"],
                     help="'traffic' runs just the admission-policy / "
                          "async replay section (the CI traffic-smoke job); "
-                         "'paged' just the paged-vs-dense KV race")
+                         "'paged' just the paged-vs-dense KV race; "
+                         "'speculative' just the draft-lane race "
+                         "(the CI spec-smoke job)")
     args = ap.parse_args()
+    if args.only == "speculative":
+        data = {"speculative": measure_speculative()}
+        with open(args.out, "w") as f:
+            json.dump(data, f, indent=2, sort_keys=True)
+            f.write("\n")
+        _report_speculative(data["speculative"])
+        print(f"wrote {args.out} (speculative section only)")
+        return
     if args.only == "traffic":
         data = {"traffic": measure_traffic()}
         with open(args.out, "w") as f:
@@ -685,6 +916,7 @@ def main():
             assert churn[label]["new_lowerings_after_warmup"] == 0, \
                 f"{label} scheduler lowered after warmup under churn"
     _report_paged(data["paged"])
+    _report_speculative(data["speculative"])
     _report_traffic(data["traffic"])
     print(f"wrote {args.out} (cache hits={hits}, "
           f"compiles={data['warm_cache']['compiles']})")

@@ -56,6 +56,18 @@ Flags:
                the allocator counters (pages in use, peak, prefix hits,
                prefill-skip rate) after the waves. See
                docs/memory_model.md.
+  --speculative K
+               speculative decode lanes (needs --schedule continuous,
+               incompatible with --paged): a layer-prefix draft proposes
+               K tokens per micro-run and the full target verifies them
+               in the same fused dispatch; K must equal
+               --steps-per-dispatch. Accepted tokens are committed at
+               micro-run boundaries, rejections roll the slot back.
+               Greedy streams stay bit-exact. Prints the acceptance
+               counters after the waves. See docs/serving.md.
+  --draft      draft model spec for --speculative: "prefix:N" runs the
+               first N layers of the target as a self-speculative draft
+               (default: half the stack).
 """
 
 from __future__ import annotations
@@ -82,7 +94,9 @@ def build_batcher(args) -> ServeBatcher:
     admission = make_policy(args.policy) if args.policy != "fifo" else None
     batcher = plan.make_batcher(policy=policy, schedule=args.schedule,
                                 steps_per_dispatch=args.steps_per_dispatch,
-                                admission=admission, paged=args.paged)
+                                admission=admission, paged=args.paged,
+                                speculative=args.speculative,
+                                draft=args.draft)
     with plan.activate():
         batcher.init_demo_params(seed=0)
     return batcher
@@ -101,6 +115,8 @@ continuous-batching extras (all need --schedule continuous):
   --stream                 asyncio streaming front-end with client TTFT
   --paged [PAGE_SIZE]      paged KV cache with shared-prefix prefill
                            skipping (docs/memory_model.md)
+  --speculative K          fused draft+verify lanes, K = micro-run length
+                           (greedy streams stay bit-exact)
 
 examples:
   %(prog)s --arch yi-6b --debug --schedule continuous \\
@@ -145,6 +161,14 @@ examples:
                     help="paged KV cache with shared-prefix reuse (needs "
                          "--schedule continuous); optional page size in "
                          "tokens, default 16")
+    ap.add_argument("--speculative", type=int, default=0, metavar="K",
+                    help="speculative decode: draft K tokens per micro-run "
+                         "and verify them in the same fused dispatch "
+                         "(needs --schedule continuous; K must equal "
+                         "--steps-per-dispatch; not with --paged)")
+    ap.add_argument("--draft", default=None, metavar="PREFIX:N",
+                    help="draft model for --speculative: 'prefix:N' = "
+                         "first N target layers (default: half the stack)")
     args = ap.parse_args()
     if args.tokens < 1:
         ap.error("--tokens must be >= 1")
@@ -162,6 +186,17 @@ examples:
         ap.error("--paged needs --schedule continuous")
     if args.paged is not None and args.paged is not True and args.paged < 1:
         ap.error("--paged page size must be >= 1")
+    if args.speculative:
+        if args.schedule != "continuous":
+            ap.error("--speculative needs --schedule continuous")
+        if args.paged is not None:
+            ap.error("--speculative is incompatible with --paged "
+                     "(dense state only)")
+        if args.speculative != args.steps_per_dispatch:
+            ap.error("--speculative must equal --steps-per-dispatch "
+                     "(the draft proposes exactly one micro-run)")
+    if args.draft is not None and not args.speculative:
+        ap.error("--draft needs --speculative")
 
     batcher = build_batcher(args)
     batch = batcher.policy.buckets[0].batch
@@ -234,6 +269,14 @@ examples:
               f"{s['dispatches']} dispatches, busy slot fraction "
               f"{s['busy_slot_fraction']}, mean refill gap "
               f"{s['mean_refill_gap']} steps")
+    if "scheduler" in stats and args.speculative:
+        s = stats["scheduler"]["spec"]
+        print(f"speculative: k={s['spec_k']} draft_layers="
+              f"{s['draft_layers']}, {s['accepted_tokens']}/"
+              f"{s['draft_tokens']} draft tokens accepted "
+              f"({s['accepted_tokens_per_dispatch']} per verify), "
+              f"{s['rollbacks']} rollbacks, "
+              f"{s['continuations']} continuations")
     if "paged" in stats:
         p = stats["paged"]
         print(f"paged: {p['pages_in_use']}/{p['page_count']} pages in "

@@ -30,7 +30,10 @@ from repro.models.base import (
     PageView,
     ShapeSpec,
     build_model,
+    draft_prefix_params,
     paged_state_specs,
+    spec_state_specs,
+    split_spec_state,
     state_batch_axes,
     wipe_state_slots,
 )
@@ -275,7 +278,8 @@ def make_masked_decode_step(cfg: ArchConfig, batch: int, max_len: int,
                             mesh: Mesh, mode: Optional[str] = None, *,
                             rules: Optional[ShardingRules] = None,
                             steps_per_dispatch: int = 1,
-                            paged: Optional[Tuple[int, int]] = None
+                            paged: Optional[Tuple[int, int]] = None,
+                            spec: Optional[Tuple[int, int]] = None
                             ) -> LoweringBundle:
     """Slot-masked decode micro-run for continuous batching (one
     executable per (bucket, k), shape-stable under churn — zero
@@ -324,14 +328,43 @@ def make_masked_decode_step(cfg: ArchConfig, batch: int, max_len: int,
     (SSM/conv/cross); stale pool pages are invisible behind the
     local-position validity mask. See ``docs/memory_model.md``.
 
+    With ``spec=(spec_k, draft_layers)`` the micro-run becomes a fused
+    speculative dispatch (dense state only; ``spec_k`` must equal k):
+    the first ``draft_layers`` blocks of the target act as a
+    self-speculative DRAFT (shared embed/ln_f/head, stacked-layer
+    parameter slice — a second compiled program from the same plan
+    machinery, not a second parameter set) and run the k-step masked
+    scan, chaining their own argmax through the feed lane exactly like
+    the plain scan chains the target's. The TARGET then scores all k
+    consumed tokens in ONE teacher-forced block pass
+    (``model.decode_block``) over the same positions. Both programs
+    index their caches at per-slot LOCAL coordinates
+    (``pos + i - start[i, b]``), which is what makes host-side rollback
+    free: the scheduler accepts the drafted prefix the target agrees
+    with and re-winds a rejected suffix by bumping the slot's start
+    cursor — no device readback beyond the per-boundary token fetch the
+    streaming path already does, no in-place cache surgery (rejected
+    rows sit at-or-above the rewound cursor where the next block's
+    write front replaces them before any validity mask admits them).
+    The draft state leaves ride in the same pytree under ``draft_``
+    keys, so pool acquire/release, per-slot wipes, and donation are
+    unchanged.
+
     Inputs:  (params, state, feed [k,B] i32, prev [B] i32, pos [] i32,
               start [k,B] i32, active [k,B] bool, fresh [k,B] bool
               [, table [B, max_len/ps] i32]) —
              ``pos`` is the micro-run's base position; scan step ``i``
-             runs global position ``pos + i``.
+             runs global position ``pos + i``. Speculative mode:
+             ``prev`` is the last COMMITTED token per slot (host-built
+             each boundary — the device carry is meaningless under
+             rollback).
     Outputs: (toks [k,B] i32 — greedy argmax for active lane-steps, 0
               elsewhere — last [B] i32 (the final scan step's tokens,
-              the next micro-run's ``prev``), and the updated state)
+              the next micro-run's ``prev``), and the updated state).
+             Speculative mode: (verify [k,B] i32 — the TARGET's greedy
+             token after each consumed position — drafts [k,B] i32 —
+             the draft's proposals — and the updated state); the host
+             compares the two lanes to accept/rollback at the boundary.
     """
     if steps_per_dispatch < 1:
         raise ValueError(
@@ -341,6 +374,25 @@ def make_masked_decode_step(cfg: ArchConfig, batch: int, max_len: int,
     model = build_model(cfg)
     pspecs = model.param_specs()
     sspecs = model.decode_state_specs(batch, max_len)
+    if spec is not None:
+        spec_k, draft_layers = spec
+        if paged is not None:
+            raise ValueError(
+                "speculative decode composes with dense state only "
+                "(paged spec lanes are a follow-on)")
+        if spec_k != k:
+            raise ValueError(
+                f"spec_k ({spec_k}) must equal steps_per_dispatch ({k}): "
+                "the draft proposes exactly one micro-run per dispatch")
+        if not 1 <= draft_layers <= cfg.n_layers:
+            raise ValueError(
+                f"draft_layers must be in [1, {cfg.n_layers}], "
+                f"got {draft_layers}")
+        if not hasattr(model, "decode_block"):
+            raise ValueError(
+                f"family {cfg.family!r} has no block-verify decode path "
+                "(decode_block); speculative lanes need one")
+        sspecs = dict(sspecs, **spec_state_specs(sspecs, draft_layers))
     if paged is not None:
         page_count, page_size = paged
         if max_len % page_size:
@@ -351,6 +403,37 @@ def make_masked_decode_step(cfg: ArchConfig, batch: int, max_len: int,
         n_tables = max_len // page_size
 
     batch_axes = state_batch_axes(sspecs)
+
+    def spec_run(params, state, feed, prev, pos, start, active, fresh):
+        state = wipe_state_slots(state, fresh[0], batch_axes)
+        tstate, dstate = split_spec_state(state)
+        dparams = draft_prefix_params(params, draft_layers)
+        local0 = (pos - start[0]).astype(jnp.int32)      # [B] per-slot
+
+        def body(carry, xs):
+            st, pv = carry
+            i, feed_i = xs
+            tok_in = jnp.where(feed_i >= 0, feed_i, pv).astype(jnp.int32)
+            logits, st = model.decode_block(dparams, st, tok_in[:, None],
+                                            local0 + i)
+            d = jnp.argmax(logits[:, 0], -1).astype(jnp.int32)
+            return (st, d), (tok_in, d)
+
+        xs = (jnp.arange(k, dtype=jnp.int32), feed)
+        (dstate, _), (tok_ins, drafts) = jax.lax.scan(
+            body, (dstate, prev), xs)
+        # one teacher-forced pass of the full target over the k tokens
+        # the draft scan actually consumed (feed steps included, so both
+        # caches hold identical token prefixes)
+        logits, tstate = model.decode_block(
+            params, tstate, jnp.swapaxes(tok_ins, 0, 1), local0)
+        verify = jnp.swapaxes(
+            jnp.argmax(logits, -1).astype(jnp.int32), 0, 1)      # [k, B]
+        zero = jnp.zeros((), jnp.int32)
+        verify = jnp.where(active, verify, zero)
+        drafts = jnp.where(active, drafts, zero)
+        state = dict(tstate, **{"draft_" + n: v for n, v in dstate.items()})
+        return verify, drafts, state
 
     def masked_run(params, state, feed, prev, pos, start, active, fresh,
                    table=None):
@@ -405,6 +488,18 @@ def make_masked_decode_step(cfg: ArchConfig, batch: int, max_len: int,
         in_sh = in_sh + (table_sh,)
         abstract = abstract + (
             jax.ShapeDtypeStruct((batch, n_tables), jnp.int32),)
+    if spec is not None:
+        # the [k, B] draft lane replaces the [B] last-token carry: the
+        # host rebuilds ``prev`` from committed tokens every boundary
+        return LoweringBundle(
+            fn=spec_run,
+            in_shardings=in_sh,
+            out_shardings=(sched_sh, sched_sh, state_sh),
+            abstract_inputs=abstract,
+            mesh=mesh,
+            rules=rules,
+            donate_argnums=(1,),
+        )
     return LoweringBundle(
         fn=masked_run,
         in_shardings=in_sh,

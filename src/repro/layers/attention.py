@@ -55,7 +55,7 @@ def _attend_block(
     k: jnp.ndarray,          # [B, Sk, H, hd]  (kv heads already repeated)
     v: jnp.ndarray,          # [B, Sk, H, hd]
     q_pos0,                  # scalar: global position of q[.,0]
-    kv_valid: Optional[jnp.ndarray],  # [B, Sk] bool or None
+    kv_valid: Optional[jnp.ndarray],  # [B, Sk] / [B, Sq, Sk] bool or None
     causal: bool,
     scale: float,
 ) -> jnp.ndarray:
@@ -69,7 +69,12 @@ def _attend_block(
         mask = si[None, :] <= qi[:, None]          # [Sq, Sk]
         scores = jnp.where(mask[None, None], scores, NEG_INF)
     if kv_valid is not None:
-        scores = jnp.where(kv_valid[:, None, None, :], scores, NEG_INF)
+        # [B, Sk] masks every query row alike; [B, Sq, Sk] is the
+        # per-query form block-verify decode needs (query j of slot b may
+        # see one more cache row than query j-1)
+        mask = kv_valid[:, None, None, :] if kv_valid.ndim == 2 \
+            else kv_valid[:, None]
+        scores = jnp.where(mask, scores, NEG_INF)
     p = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum(
         "bhqs,bshd->bqhd", p.astype(v.dtype), v,
@@ -102,6 +107,10 @@ def mha(
     B, Sq, H, hd = q.shape
     KV = k.shape[2]
     assert H % KV == 0, (H, KV)
+    if kv_valid is not None and kv_valid.ndim == 3:
+        # per-query masks ([B, Sq, Sk]) are a short-block decode feature;
+        # the q-chunk scan below would need per-chunk mask slices
+        assert Sq <= q_chunk or Sq % q_chunk, (Sq, q_chunk)
     G = H // KV
     scale = hd**-0.5
     if G > 1:
@@ -302,4 +311,55 @@ def paged_decode_self_attention(
     kv_valid = jnp.arange(S)[None, :] <= local[:, None]
     o = mha(q, k_all, v_all, causal=False, kv_valid=kv_valid)
     out = linear(params["wo"], o.reshape(B, 1, n_heads * head_dim))
+    return out, cache_k, cache_v
+
+
+def block_decode_self_attention(
+    params: dict,
+    x: jnp.ndarray,              # [B, m, d] block of token hiddens
+    cache_k: jnp.ndarray,        # [B, S, KV, hd] this layer's cache
+    cache_v: jnp.ndarray,
+    local: jnp.ndarray,          # [B] int32: LOCAL position of x[:, 0]
+    *,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    rope_theta: float = 10000.0,
+):
+    """Decode a block of ``m`` consecutive tokens per slot in ONE pass.
+
+    The dense sibling of the paged path's local-coordinate contract:
+    slot ``b``'s token ``j`` lives at cache row ``local[b] + j`` of its
+    OWN lane — RoPE rotates by that local index and the per-query
+    validity mask admits rows ``<= local[b] + j``, so every row a query
+    can see was written by this request's own (teacher-forced or
+    accepted) tokens. That is what makes host-side rewind free for
+    speculative decoding: rejecting a drafted suffix is just a bump of
+    the slot's start cursor — the garbage rows it leaves behind sit at
+    locals at-or-above the rewound cursor, where the next block's write
+    front overwrites them before any mask ever admits them. The
+    global-coordinate dense path cannot do this (its contiguous
+    ``[window_start, pos]`` window has no way to mask a rejected hole).
+
+    ``m == 1`` is the draft scan's single-token step; ``m == k`` the
+    target's verify pass over a whole micro-run.
+
+    Returns (out [B,m,d], new_cache_k, new_cache_v).
+    """
+    B, m, _ = x.shape
+    S = cache_k.shape[1]
+    q = linear(params["wq"], x).reshape(B, m, n_heads, head_dim)
+    k = linear(params["wk"], x).reshape(B, m, n_kv, head_dim)
+    v = linear(params["wv"], x).reshape(B, m, n_kv, head_dim)
+    posb = local[:, None].astype(jnp.int32) + jnp.arange(m, dtype=jnp.int32)
+    inv_freq = rope_freqs(head_dim, rope_theta)
+    q = apply_rope(q, posb, inv_freq)
+    k = apply_rope(k, posb, inv_freq)
+    rows = jnp.arange(B)[:, None]
+    cache_k = cache_k.at[rows, posb].set(k)
+    cache_v = cache_v.at[rows, posb].set(v)
+    # query j of slot b sees exactly rows [0, local[b] + j]
+    kv_valid = jnp.arange(S)[None, None, :] <= posb[:, :, None]
+    o = mha(q, cache_k, cache_v, causal=False, kv_valid=kv_valid)
+    out = linear(params["wo"], o.reshape(B, m, n_heads * head_dim))
     return out, cache_k, cache_v

@@ -267,6 +267,74 @@ def decode_head_logits(head_w: jnp.ndarray, x: jnp.ndarray,
                       preferred_element_type=jnp.float32)[:, 0]
 
 
+def decode_block_head_logits(head_w: jnp.ndarray, x: jnp.ndarray,
+                             cfg: ArchConfig) -> jnp.ndarray:
+    """Logits [B, m, V] for a block of m decode hiddens ``x`` [B, m, d].
+
+    The block form of :func:`decode_head_logits` (same shifts, same int8
+    contract on the quantized path) for speculative block verification:
+    the target model scores every position of a drafted micro-run in one
+    projection instead of m GEMVs.
+    """
+    if cfg.quantized:
+        from repro.layers.linear import quantized_linear
+
+        return quantized_linear(
+            {"w": head_w}, x,
+            x_shift=5, w_shift=8, out_shift=11, out_dtype="int16",
+            out_float_dtype=jnp.float32,
+        )
+    return jnp.einsum("bsd,dv->bsv", x, head_w,
+                      preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Self-speculative draft: an early-exit layer prefix of the target
+# ---------------------------------------------------------------------------
+
+
+def spec_state_specs(sspecs, draft_layers: int, prefix: str = "draft_"):
+    """Draft-model decode-state leaves for the layer-prefix draft.
+
+    Every target state leaf with a ``"layers"`` logical axis gets a
+    ``draft_``-prefixed twin whose layers dim is ``draft_layers`` — the
+    KV the self-speculative draft (the first ``draft_layers`` blocks of
+    the target, sharing embed/final-norm/head) accumulates while it
+    proposes tokens. Merging these into the target's state pytree keeps
+    the whole StatePool lifecycle (acquire/release, donated per-slot
+    wipes, batch-axis discovery) a single uniform tree.
+    """
+    out = {}
+    for name, s in sspecs.items():
+        li = s.logical.index("layers")
+        shape = s.shape[:li] + (draft_layers,) + s.shape[li + 1:]
+        out[prefix + name] = ParamSpec(shape, s.logical, s.dtype, s.init)
+    return out
+
+
+def split_spec_state(state, prefix: str = "draft_"):
+    """Split a merged decode state into (target tree, draft tree).
+
+    The draft tree's keys have the prefix stripped so the same
+    ``decode_block`` consumes either half.
+    """
+    target = {k: v for k, v in state.items() if not k.startswith(prefix)}
+    draft = {k[len(prefix):]: v for k, v in state.items()
+             if k.startswith(prefix)}
+    return target, draft
+
+
+def draft_prefix_params(params, draft_layers: int):
+    """The self-speculative draft's parameter view: the target's stacked
+    blocks sliced to the first ``draft_layers`` layers, embed/ln_f/head
+    shared verbatim. A pure (traceable) slice — no extra parameters, no
+    extra host transfer."""
+    out = dict(params)
+    out["blocks"] = jax.tree.map(lambda a: a[:draft_layers],
+                                 params["blocks"])
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Shared loss: chunked cross-entropy that never materializes [B,S,V] fp32
 # ---------------------------------------------------------------------------

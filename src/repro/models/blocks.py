@@ -10,6 +10,7 @@ import jax.numpy as jnp
 from repro.dist.sharding import shard_act
 from repro.layers.attention import (
     attention_spec,
+    block_decode_self_attention,
     cross_attention,
     decode_self_attention,
     paged_decode_self_attention,
@@ -85,7 +86,7 @@ def attn_block(
 
 def attn_block_decode(
     params: dict,
-    x: jnp.ndarray,              # [B, 1, d]
+    x: jnp.ndarray,              # [B, 1, d] (or [B, m, d] with ``local``)
     cache_k: jnp.ndarray,        # dense [B,S,KV,hd] or paged [P,ps,KV,hd]
     cache_v: jnp.ndarray,
     pos: jnp.ndarray,
@@ -93,9 +94,19 @@ def attn_block_decode(
     *,
     window_start: Optional[jnp.ndarray] = None,   # [B] int32 slot windows
     pages=None,                  # models.base.PageView: paged KV layout
+    local: Optional[jnp.ndarray] = None,   # [B] int32: local block coords
 ):
     h = rmsnorm(params["ln1"], x)
-    if pages is not None:
+    if local is not None:
+        # dense local-coordinate block decode (speculative lanes): ``pos``
+        # and ``window_start`` are unused — each slot indexes, rotates,
+        # and masks at its own local positions [local[b], local[b]+m)
+        h, ck, cv = block_decode_self_attention(
+            params["attn"], h, cache_k, cache_v, local,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.head_dim,
+            rope_theta=cfg.rope_theta,
+        )
+    elif pages is not None:
         h, ck, cv = paged_decode_self_attention(
             params["attn"], h, cache_k, cache_v, pages,
             n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.head_dim,

@@ -19,6 +19,7 @@ from repro.layers.embedding import embed, embedding_spec, lm_head_spec
 from repro.layers.norm import rmsnorm, rmsnorm_spec
 from repro.models.base import (
     ArchConfig,
+    decode_block_head_logits,
     decode_head_logits,
     lm_loss_chunked,
     stackify,
@@ -115,6 +116,37 @@ class DecoderLM:
         )
         x = rmsnorm(params["ln_f"], x)
         logits = decode_head_logits(params["head"]["w"], x, cfg)
+        return logits, {"cache_k": ck, "cache_v": cv}
+
+    def decode_block(self, params, state: Dict, tokens: jnp.ndarray,
+                     local: jnp.ndarray):
+        """Score a block of m consecutive tokens per sequence in one pass.
+
+        tokens [B, m] int32; ``local`` [B] int32 is each slot's LOCAL
+        position for ``tokens[:, 0]`` (see
+        ``block_decode_self_attention`` for the coordinate contract —
+        RoPE, cache writes, and the per-query validity mask all use
+        ``local[b] + j``). Returns (logits [B, m, V], state):
+        ``logits[b, j]`` is the next-token distribution after consuming
+        ``tokens[b, :j+1]``, exactly what ``m`` sequential
+        ``decode_step`` calls would produce up to float re-association.
+        This is both the speculative draft's step (m == 1) and the
+        target's teacher-forced verify pass (m == micro-run length).
+        """
+        cfg = self.cfg
+        x = embed(params["embed"], tokens)
+
+        def body(x, inp):
+            layer_params, ck, cv = inp
+            x, ck, cv = attn_block_decode(layer_params, x, ck, cv, None,
+                                          cfg, local=local)
+            return x, (ck, cv)
+
+        x, (ck, cv) = jax.lax.scan(
+            body, x, (params["blocks"], state["cache_k"], state["cache_v"])
+        )
+        x = rmsnorm(params["ln_f"], x)
+        logits = decode_block_head_logits(params["head"]["w"], x, cfg)
         return logits, {"cache_k": ck, "cache_v": cv}
 
     # -- dry-run input specs --------------------------------------------------

@@ -333,7 +333,10 @@ def compile_pass(ir: PlanIR) -> PlanIR:
             "batch": "per-bucket", "seq_len": "per-bucket",
             "steps_per_dispatch": "per-scheduler",
             "note": "slot-masked continuous-batching micro-run (scans k "
-                    "masked steps per call; cache-keyed by k)",
+                    "masked steps per call; cache-keyed by k). Variants: "
+                    "paged=(page_count, page_size) pooled-KV layout; "
+                    "spec=(spec_k, draft_layers) fused speculative "
+                    "draft-scan + block-verify — both join the cache key",
         }
     ir.executables = cat
     ir.record("Compile", kinds=sorted(cat), cache="serve.ExecutableCache",

@@ -135,7 +135,7 @@ class ExecutionPlan:
         return specs_to_shardings(sspecs, self.mesh, self.rules)
 
     def fresh_decode_state(self, batch: int, max_len: int, paged=None,
-                           only: Optional[str] = None):
+                           only: Optional[str] = None, spec=None):
         """A zeroed, sharded decode-state pytree for one bucket shape.
 
         With ``paged=(page_count, page_size)`` the KV leaves come back in
@@ -146,9 +146,16 @@ class ExecutionPlan:
         to one half of the split: ``"pool"`` returns just the pooled KV
         leaves (bucket-independent; the StatePool builds them once and
         shares them across buckets), ``"dense"`` just the per-slot
-        remainder.
+        remainder. With ``spec=(spec_k, draft_layers)`` the tree also
+        carries the ``draft_``-prefixed layer-prefix KV leaves the fused
+        speculative executable scans (dense only; the pool and per-slot
+        wipes treat them like any other batch-laned leaf).
         """
         sspecs = self.model.decode_state_specs(batch, max_len)
+        if spec is not None:
+            from repro.models.base import spec_state_specs
+
+            sspecs = dict(sspecs, **spec_state_specs(sspecs, spec[1]))
         if paged is not None:
             from repro.models.base import PAGED_STATE_KEYS, paged_state_specs
 
@@ -200,14 +207,14 @@ class ExecutionPlan:
 
     def _key(self, kind: str, batch: int, max_len: int,
              prefill_len: int = 0, steps: int = 1,
-             paged=()) -> CacheKey:
+             paged=(), spec=()) -> CacheKey:
         return CacheKey(
             arch=self.cfg.name, kind=kind, batch=batch, max_len=max_len,
             prefill_len=prefill_len, mode=self.mode,
             mesh_axes=CacheKey.mesh_signature(self.mesh),
             quantized=self.cfg.quantized,
             stages=self.ir.pipeline_stages, qsig=self._qsig(),
-            steps=steps, paged=tuple(paged),
+            steps=steps, paged=tuple(paged), spec=tuple(spec),
         )
 
     def executable(self, kind: Optional[str] = None) -> CachedExecutable:
@@ -236,7 +243,7 @@ class ExecutionPlan:
     def serve_executable(self, kind: str, *, batch: int, max_len: int,
                          prefill_len: int = 0,
                          steps_per_dispatch: int = 1,
-                         paged=None) -> CachedExecutable:
+                         paged=None, spec=None) -> CachedExecutable:
         """A bucketed serving executable: ``kind`` is "decode" (single
         token against resident state), "prefill" (the prefill->decode
         scan handoff padded to ``prefill_len``), or "masked_decode" (the
@@ -247,6 +254,12 @@ class ExecutionPlan:
         ``paged=(page_count, page_size)`` (masked_decode only) swaps the
         dense per-slot KV slabs for the pooled paged layout plus a
         per-slot page-table input; requires ``max_len % page_size == 0``.
+        ``spec=(spec_k, draft_layers)`` (masked_decode only, dense only)
+        builds the fused speculative variant: a layer-prefix draft scans
+        the micro-run and the full target block-verifies it in the same
+        dispatch (see ``make_masked_decode_step``); the draft signature
+        joins the cache key so plans differing only in draft depth never
+        share an executable.
         """
         if steps_per_dispatch < 1:
             raise ValueError(
@@ -267,6 +280,24 @@ class ExecutionPlan:
                 raise ValueError(
                     f"max_len {max_len} must be a multiple of page_size "
                     f"{page_size}")
+        if spec is not None:
+            if kind != "masked_decode":
+                raise ValueError(
+                    "speculative decode only applies to masked_decode "
+                    f"executables, not {kind!r}")
+            if paged is not None:
+                raise ValueError(
+                    "speculative decode composes with dense state only "
+                    "(paged spec lanes are a follow-on)")
+            spec_k, draft_layers = spec
+            if spec_k != steps_per_dispatch:
+                raise ValueError(
+                    f"spec_k ({spec_k}) must equal steps_per_dispatch "
+                    f"({steps_per_dispatch})")
+            if not 1 <= draft_layers <= self.cfg.n_layers:
+                raise ValueError(
+                    f"draft_layers must be in [1, {self.cfg.n_layers}], "
+                    f"got {draft_layers}")
         if kind == "decode":
             shape = ShapeSpec(f"b{batch}xl{max_len}", max_len, batch,
                               "decode")
@@ -279,12 +310,13 @@ class ExecutionPlan:
         elif kind == "masked_decode":
             build = lambda: make_masked_decode_step(  # noqa: E731
                 self.cfg, batch, max_len, self.mesh, rules=self.rules,
-                steps_per_dispatch=steps_per_dispatch, paged=paged)
+                steps_per_dispatch=steps_per_dispatch, paged=paged, spec=spec)
         else:
             raise ValueError(f"unknown serve executable kind {kind!r}")
         key = self._key(kind, batch, max_len, prefill_len,
                         steps=steps_per_dispatch,
-                        paged=paged if paged is not None else ())
+                        paged=paged if paged is not None else (),
+                        spec=spec if spec is not None else ())
         self._built_any = True
         return self.cache.get_or_build(key, build)
 

@@ -240,7 +240,9 @@ class ServeBatcher:
                  schedule: str = "fifo",
                  steps_per_dispatch: int = 1,
                  admission=None,
-                 paged=None):
+                 paged=None,
+                 speculative: int = 0,
+                 draft: Optional[str] = None):
         from repro.plan import ExecutionPlan, build_plan
 
         if isinstance(plan_or_cfg, ExecutionPlan):
@@ -274,9 +276,13 @@ class ServeBatcher:
         self.steps_per_dispatch = steps_per_dispatch
         self.policy = policy or BucketPolicy.debug()
         # paged KV: True -> auto geometry, int -> auto with that page
-        # size, (page_count, page_size) -> exact
+        # size, (page_count, page_size) -> exact. False must mean "dense",
+        # not "auto with page_size=0": bool is an int subclass, so it has
+        # to be caught before the page-size branch
         if paged is True:
             paged = auto_paged(self.policy)
+        elif paged is False:
+            paged = None
         elif isinstance(paged, int):
             paged = auto_paged(self.policy, page_size=paged)
         elif paged is not None:
@@ -292,7 +298,48 @@ class ServeBatcher:
                         f"bucket {b.label}: max_len must be a multiple of "
                         f"page_size={paged[1]}")
         self.paged = paged
-        self.pool = StatePool(self.plan, paged=paged)
+        # speculative decode: ``speculative`` = spec_k (draft tokens per
+        # micro-run, must equal steps_per_dispatch), ``draft`` names the
+        # draft model — "prefix:N" runs the first N layers of the target
+        # as a self-speculative draft (default: half the stack)
+        spec = None
+        if draft is not None and not speculative:
+            raise ValueError(
+                "draft only applies with speculative decode "
+                "(speculative > 0)")
+        if speculative:
+            if schedule != "continuous":
+                raise ValueError(
+                    "speculative decode needs schedule='continuous' — only "
+                    "the masked-decode micro-run has a draft feed lane")
+            if paged is not None:
+                raise ValueError(
+                    "speculative decode composes with dense state only "
+                    "(paged spec lanes are a follow-on)")
+            if speculative != steps_per_dispatch:
+                raise ValueError(
+                    f"speculative ({speculative}) must equal "
+                    f"steps_per_dispatch ({steps_per_dispatch}): the draft "
+                    "proposes exactly one micro-run per dispatch")
+            n_layers = self.plan.cfg.n_layers
+            draft_layers = max(1, n_layers // 2)
+            if draft is not None:
+                dkind, _, depth = draft.partition(":")
+                if dkind != "prefix" or not depth.isdigit():
+                    raise ValueError(f"draft must be 'prefix:N', got "
+                                     f"{draft!r}")
+                draft_layers = int(depth)
+            if not 1 <= draft_layers <= n_layers:
+                raise ValueError(
+                    f"draft depth must be in [1, {n_layers}], got "
+                    f"{draft_layers}")
+            if not hasattr(self.plan.model, "decode_block"):
+                raise ValueError(
+                    f"family {self.plan.cfg.family!r} has no block-verify "
+                    "decode path (decode_block); speculative lanes need one")
+            spec = (speculative, draft_layers)
+        self.spec = spec
+        self.pool = StatePool(self.plan, paged=paged, spec=spec)
         self.params = None
         self.metrics: Dict[str, BucketMetrics] = {}
         self._pending: Deque[DecodeRequest] = collections.deque()
@@ -307,7 +354,7 @@ class ServeBatcher:
             self._scheduler = ContinuousScheduler(
                 self.plan, self.policy, self.pool,
                 steps_per_dispatch=steps_per_dispatch,
-                admission=admission)
+                admission=admission, spec=spec)
 
     @property
     def scheduler(self):
@@ -453,6 +500,8 @@ class ServeBatcher:
         kw = {}
         if kind == "masked_decode" and self.paged is not None:
             kw["paged"] = self.paged
+        if kind == "masked_decode" and self.spec is not None:
+            kw["spec"] = self.spec
         return self.plan.serve_executable(
             kind, batch=bucket.batch, max_len=bucket.max_len,
             prefill_len=prefill_len,

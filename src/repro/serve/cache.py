@@ -9,7 +9,7 @@ lowered+compiled XLA executable produced by a ``LoweringBundle`` from
 by everything that changes the program:
 
     (arch, kind, batch, max_len, prefill_len, mode, mesh axes, quantized,
-     stages, qsig, steps, paged)
+     stages, qsig, steps, paged, spec)
 
 ``ExecutableCache.get_or_build`` is the only entry point — the plan's
 Compile pass routes every executable in the system (train, prefill,
@@ -48,6 +48,12 @@ class CacheKey:
     for a paged-KV masked-decode executable — the paged program takes an
     extra page-table input and indexes a pooled cache, so it must never
     collide with the dense one even at identical bucket geometry.
+    ``spec`` is ``()`` for plain decode and ``(spec_k, draft_layers)``
+    for a speculative masked-decode executable — the draft signature:
+    the fused program embeds a second (layer-prefix) model, carries
+    draft state leaves, and returns a draft token lane, so two plans
+    differing only in draft depth or spec_k must never share one
+    executable.
     """
 
     arch: str
@@ -62,6 +68,7 @@ class CacheKey:
     qsig: Tuple[Tuple[Any, ...], ...] = ()
     steps: int = 1
     paged: Tuple[int, ...] = ()
+    spec: Tuple[int, ...] = ()
 
     @staticmethod
     def mesh_signature(mesh: Mesh) -> Tuple[Tuple[str, int], ...]:

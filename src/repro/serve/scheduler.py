@@ -62,6 +62,20 @@ Boundary seams (all host-side, none touch the compiled step):
 * ``clock`` — the admission policy's time source: ``None`` means the
   deterministic global step counter; the async server installs
   ``time.monotonic`` so deadlines are wall-clock.
+
+Speculative mode (``spec=(spec_k, draft_layers)``, dense state only):
+each micro-run dispatches the FUSED draft-scan + block-verify executable
+(see ``make_masked_decode_step``) instead of the plain k-step scan. At
+the boundary the host fetches the draft and verify token lanes, accepts
+each lane's longest draft prefix the target agrees with, commits those
+tokens (``_Slot.acc`` — results and streaming deltas publish only
+accepted tokens, so greedy streams stay bit-exact), and rolls the rest
+back by bumping ``_Slot.start`` — in the executable's local coordinates
+a start bump replays the rejected cache positions for free. Rollbacks
+consume extra bucket positions; when a request runs out, it requeues as
+a *continuation* whose prompt carries everything committed so far (the
+carry map merges legs into one result), preserving the plain-mode
+invariant that a dispatch always terminates.
 """
 
 from __future__ import annotations
@@ -113,6 +127,12 @@ class _Slot:
     start: int            # global position of the request's first token
     fed: int = 0          # prompt tokens teacher-forced so far
     pages: Optional[object] = None   # SlotPages lease (paged mode only)
+    # speculative mode only: tokens committed (target-verified) so far
+    # this admission, and the last committed token — the host rebuilds
+    # the executable's ``prev`` input from it each micro-run, because a
+    # boundary rollback makes the device-resident carry meaningless
+    acc: Optional[List[int]] = None
+    prev_tok: int = 0
 
     @property
     def end_step(self) -> int:
@@ -135,7 +155,8 @@ class ContinuousScheduler:
 
     def __init__(self, plan, policy: BucketPolicy, pool: StatePool,
                  steps_per_dispatch: int = 1, admission=None,
-                 clock: Optional[Callable[[], float]] = None):
+                 clock: Optional[Callable[[], float]] = None,
+                 spec: Optional[tuple] = None):
         from repro.serve.policy import FifoPolicy
 
         if steps_per_dispatch < 1:
@@ -155,6 +176,18 @@ class ContinuousScheduler:
                         f"bucket {b.label}: max_len must be a multiple of "
                         f"page_size={paged[1]} so page tables tile the "
                         "position space")
+        spec = tuple(spec) if spec else None
+        if spec is not None:
+            if paged is not None:
+                raise ValueError(
+                    "speculative decode composes with dense state only "
+                    "(paged spec lanes are a follow-on)")
+            if spec[0] != steps_per_dispatch:
+                raise ValueError(
+                    f"spec_k ({spec[0]}) must equal steps_per_dispatch "
+                    f"({steps_per_dispatch}): the draft proposes exactly "
+                    "one micro-run per dispatch")
+        self.spec = spec
         self.plan = plan
         self.policy = policy
         self.pool = pool
@@ -174,6 +207,19 @@ class ContinuousScheduler:
         self.refills = 0
         self.refill_gap_total = 0
         self.max_refill_gap = 0
+        # speculative decode: (lane, micro-run) verify events, draft
+        # tokens proposed/accepted across them, boundary rollbacks, and
+        # continuations requeued when rollbacks exhaust a bucket's
+        # position space mid-request
+        self.spec_verifies = 0
+        self.spec_draft_tokens = 0
+        self.spec_accepted_tokens = 0
+        self.spec_rollbacks = 0
+        self.spec_continuations = 0
+        self.spec_partial_results = 0
+        # committed tokens of requeued continuations, by request id;
+        # merged into the final result when the continuation finishes
+        self._spec_carry: Dict[str, List[int]] = {}
         self.events: Deque[SlotEvent] = collections.deque(
             maxlen=_EVENT_WINDOW)
         # per-dispatch [B] idle-step vectors (benchmark slot-idle p50/p99)
@@ -248,6 +294,9 @@ class ContinuousScheduler:
         now = self._now()
         for req in self.admission.shed(pending, now):
             self.sheds += 1
+            # a shed speculative continuation delivers nothing: drop its
+            # committed prefix too, so the carry map stays bounded
+            self._spec_carry.pop(req.request_id, None)
             self._shed_ids.add(req.request_id)
             self.events.append(SlotEvent("shed", pos, -1, req.request_id))
             if self.on_shed is not None:
@@ -286,7 +335,8 @@ class ContinuousScheduler:
                 slots[b] = _Slot(chosen, start=pos - lease.shared_len,
                                  fed=lease.shared_len, pages=lease)
             else:
-                slots[b] = _Slot(chosen, start=pos)
+                slots[b] = _Slot(chosen, start=pos,
+                                 acc=[] if self.spec is not None else None)
             admitted.append(b)
             self.admissions += 1
             self.events.append(SlotEvent("admit", pos, b, chosen.request_id))
@@ -312,6 +362,16 @@ class ContinuousScheduler:
             for rid in self._stale_cancels:
                 if results.pop(rid, None) is not None:
                     self.cancellations += 1
+                if rid in self._spec_carry:
+                    # the cancel raced a speculative continuation that was
+                    # requeued at the last drain: drop it before the next
+                    # dispatch re-admits it
+                    self._spec_carry.pop(rid)
+                    for req in list(pending):
+                        if req.request_id == rid:
+                            pending.remove(req)
+                            self.cancellations += 1
+                            break
             self._stale_cancels.clear()
             results.update(res)
         return results
@@ -328,12 +388,14 @@ class ContinuousScheduler:
                 alloc.publish(slot.pages, slot.fed)
             alloc.release(slot.pages)
         if done is not None:
-            done.append((slot.req, b, slot.start))
+            done.append((slot.req, b, slot.start, slot.acc))
             # the free happened when the request produced its last token
             self.events.append(
                 SlotEvent("free", slot.end_step, b, slot.req.request_id))
             freed_at[b] = slot.end_step
         else:
+            # a canceled speculative request forfeits its committed prefix
+            self._spec_carry.pop(slot.req.request_id, None)
             self.events.append(
                 SlotEvent("cancel", pos, b, slot.req.request_id))
             # the lane was occupied through the previous micro-run's end
@@ -353,6 +415,8 @@ class ContinuousScheduler:
         paged = getattr(self.pool, "paged", None)
         alloc = getattr(self.pool, "allocator", None)
         kw = {"paged": paged} if paged is not None else {}
+        if self.spec is not None:
+            kw["spec"] = self.spec
         exe = self.plan.serve_executable("masked_decode", batch=B, max_len=L,
                                          steps_per_dispatch=k, **kw)
         sched_sh = exe.bundle.in_shardings[2]
@@ -371,10 +435,12 @@ class ContinuousScheduler:
         freed_at = [-1] * B
         idle_steps = [0] * B
         ever_used = [False] * B
-        done: List[tuple] = []        # (req, slot idx, start)
+        done: List[tuple] = []        # (req, slot idx, start, acc-or-None)
         outs = []                     # per-micro-run device token blocks [k,B]
-        prev = jax.device_put(np.zeros((B,), np.int32), prev_sh)
+        prev_host = np.zeros((B,), np.int32)
+        prev = jax.device_put(prev_host, prev_sh)
         pos = 0
+        runs = 0                      # micro-runs this dispatch executed
 
         # lane schedules only change on admission/free/prefill events;
         # in the steady decode state reuse the resident device buffers
@@ -396,10 +462,11 @@ class ContinuousScheduler:
             a canceled id cannot be swallowed."""
             for rid in list(self._canceled):
                 self._canceled.discard(rid)
-                idx = next((i for i, (req, _, _) in enumerate(done)
+                idx = next((i for i, (req, _, _, _) in enumerate(done)
                             if req.request_id == rid), None)
                 if idx is not None:
                     del done[idx]             # finished: drop the tokens
+                    self._spec_carry.pop(rid, None)
                     self.cancellations += 1
                 else:
                     self._stale_cancels.add(rid)
@@ -448,7 +515,9 @@ class ContinuousScheduler:
                 np.arange(pos, pos + k, dtype=np.int32)[:, None],
                 (k, B)).copy()
             active = np.zeros((k, B), bool)
-            for b, slot in enumerate(slots):
+            lives = [0] * B           # spec acceptance re-walks live steps
+            feeds_n = [0] * B         # prompt feeds among them (never rolled
+            for b, slot in enumerate(slots):     # back: feeds come first)
                 if slot is None:
                     idle_steps[b] += k
                     self.idle_slot_steps += k
@@ -456,6 +525,7 @@ class ContinuousScheduler:
                 # steps this request still runs inside the micro-run;
                 # beyond them the slot self-masks (active False)
                 live = min(k, slot.end_step - pos + 1)
+                lives[b] = live
                 active[:live, b] = True
                 start[:, b] = slot.start
                 idle_steps[b] += k - live
@@ -464,6 +534,7 @@ class ContinuousScheduler:
                     if slot.fed < len(slot.req.prompt):
                         feed[i, b] = slot.req.prompt[slot.fed]
                         slot.fed += 1
+                        feeds_n[b] += 1
                     else:
                         feed[i, b] = -1   # continue from the slot's argmax
 
@@ -480,6 +551,66 @@ class ContinuousScheduler:
                         pg = slot.pages.pages
                         table[b, :len(pg)] = pg
                 extra = (lane("table", table, table_sh),)
+            if self.spec is not None:
+                # fused draft-scan + block-verify: the host accepts the
+                # longest draft prefix the target agrees with and rolls
+                # the rest back by bumping the slot's window start (free
+                # in the executable's local coordinates)
+                verify, drafts, state = exe.compiled(
+                    params, state,
+                    lane("feed", feed),
+                    jax.device_put(prev_host.copy(), prev_sh),
+                    jax.device_put(np.int32(pos), pos_sh),
+                    lane("start", start),
+                    lane("active", active),
+                    lane("fresh", fresh))
+                vt = np.asarray(jax.device_get(verify))
+                dt = np.asarray(jax.device_get(drafts))
+                deltas: Dict[str, List[int]] = {}
+                for b, slot in enumerate(slots):
+                    if slot is None:
+                        continue
+                    live = lives[b]
+                    # step i consumed the right token iff it was a prompt
+                    # feed, the host-correct prev (i == 0), or the draft
+                    # matched the target at step i-1; validity is closed
+                    # under prefixes, so the accepted set is {0..n-1}
+                    n = 0
+                    for i in range(live):
+                        if feed[i, b] >= 0 or i == 0 or \
+                                dt[i - 1, b] == vt[i - 1, b]:
+                            n += 1
+                        else:
+                            break
+                    n_dec = live - feeds_n[b]
+                    if n_dec > 0:
+                        self.spec_verifies += 1
+                        self.spec_draft_tokens += n_dec
+                        self.spec_accepted_tokens += n - feeds_n[b]
+                    first = slot.start + len(slot.req.prompt) - 1
+                    new = [int(vt[i, b]) for i in range(n)
+                           if pos + i >= first]
+                    slot.acc.extend(new)
+                    slot.prev_tok = int(vt[n - 1, b])
+                    prev_host[b] = slot.prev_tok
+                    if n < live:
+                        self.spec_rollbacks += 1
+                    # the universal bump k - n advances the slot's local
+                    # cursor by exactly n: rejected steps replay next
+                    # micro-run, and a fully-accepted short lane (live <
+                    # k) still lands end_step at pos + live - 1 + (k -
+                    # live) = pos + k - 1, so it frees at the boundary
+                    slot.start += k - n
+                    if new:
+                        deltas[slot.req.request_id] = new
+                if deltas and self.on_tokens is not None:
+                    self.on_tokens(deltas)
+                self.micro_runs += 1
+                self.steps += k
+                self.slot_steps += k * B
+                pos += k
+                runs += 1
+                continue
             toks, prev, state = exe.compiled(
                 params, state,
                 lane("feed", feed), prev,
@@ -512,12 +643,41 @@ class ContinuousScheduler:
             self.steps += k
             self.slot_steps += k * B
             pos += k
+            runs += 1
 
         # every admitted request ends inside the loop (admission bounds
-        # end_step < L and micro-runs tile [0, L)), so drain the rest
+        # end_step < L and micro-runs tile [0, L)), so drain the rest —
+        # except in spec mode, where rollback bumps can push a request's
+        # end_step past the bucket's positions: those requeue as
+        # continuations whose prompt carries everything committed so far
+        requeues: List[DecodeRequest] = []
+        max_bucket_len = max(bk.max_len for bk in self.policy.buckets)
         for b, slot in enumerate(slots):
-            if slot is not None:
+            if slot is None:
+                continue
+            if self.spec is not None and slot.end_step >= pos:
+                rid = slot.req.request_id
+                carry = self._spec_carry.pop(rid, []) + slot.acc
+                cont = dataclasses.replace(
+                    slot.req,
+                    prompt=list(slot.req.prompt) + slot.acc,
+                    max_new_tokens=slot.req.max_new_tokens - len(slot.acc))
+                if cont.need_len > max_bucket_len:
+                    # no bucket can hold the continuation: deliver the
+                    # committed prefix as a (counted) partial result
+                    self.spec_partial_results += 1
+                    done.append((slot.req, b, slot.start, carry))
+                else:
+                    self._spec_carry[rid] = carry
+                    requeues.append(cont)
+                    self.spec_continuations += 1
+                    self.events.append(SlotEvent("requeue", pos, b, rid))
+                freed_at[b] = pos - 1
+                slots[b] = None
+            else:
                 self._free(slots, b, pos, freed_at, done)
+        for cont in reversed(requeues):
+            pending.appendleft(cont)
         drain_cancels()   # marks set during the final micro-run
 
         if outs:
@@ -531,12 +691,18 @@ class ContinuousScheduler:
             [np.asarray(jax.device_get(t)) for t in outs], axis=0)
             if outs else np.zeros((0, B), np.int32))   # [steps, B]
         results: Dict[str, RequestResult] = {}
-        for req, b, s in done:
-            first = s + len(req.prompt) - 1
+        for req, b, s, acc in done:
+            if acc is not None:
+                # spec mode: host-committed tokens, prefixed by whatever
+                # earlier continuation legs carried over
+                tokens = self._spec_carry.pop(req.request_id, []) + acc
+            else:
+                first = s + len(req.prompt) - 1
+                tokens = [int(t) for t in
+                          toks[first:first + req.max_new_tokens, b]]
             results[req.request_id] = RequestResult(
                 request_id=req.request_id,
-                tokens=[int(t) for t in
-                        toks[first:first + req.max_new_tokens, b]],
+                tokens=tokens,
                 bucket=bucket.label,
                 prefill_seconds=0.0,   # prefill is folded into the steps
                 total_seconds=t_total,
@@ -551,7 +717,7 @@ class ContinuousScheduler:
         m.new_tokens += sum(len(r.tokens) for r in results.values())
         m.decode_seconds += t_total
         m.latencies.extend([t_total] * len(results))
-        span = len(outs) * k
+        span = runs * k
         m.slot_steps += span * B
         for b in range(B):
             m.busy_slot_steps += span - idle_steps[b]
@@ -567,7 +733,7 @@ class ContinuousScheduler:
 
     def stats(self) -> Dict[str, object]:
         busy = self.slot_steps - self.idle_slot_steps
-        return {
+        out = {
             "dispatches": self.dispatches,
             "micro_runs": self.micro_runs,
             "steps_per_dispatch": self.steps_per_dispatch,
@@ -586,3 +752,20 @@ class ContinuousScheduler:
             if self.refills else 0.0,
             "max_refill_gap": self.max_refill_gap,
         }
+        if self.spec is not None:
+            out["spec"] = {
+                "spec_k": self.spec[0],
+                "draft_layers": self.spec[1],
+                "verifies": self.spec_verifies,
+                "draft_tokens": self.spec_draft_tokens,
+                "accepted_tokens": self.spec_accepted_tokens,
+                "rollbacks": self.spec_rollbacks,
+                "continuations": self.spec_continuations,
+                "partial_results": self.spec_partial_results,
+                # the headline: committed tokens per (lane, micro-run)
+                # verify event — > 1 means speculation beats one-at-a-time
+                "accepted_tokens_per_dispatch": round(
+                    self.spec_accepted_tokens / self.spec_verifies, 3)
+                if self.spec_verifies else 0.0,
+            }
+        return out

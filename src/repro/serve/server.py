@@ -16,7 +16,12 @@ scheduler's determinism:
   ``on_tokens`` hook fetches each micro-run's ``[k, slots]`` block at
   the boundary and routes every live request its newly generated tokens;
   ``stream()`` is an async generator yielding them as they arrive
-  (time-to-first-token is a few micro-runs, not a full drain);
+  (time-to-first-token is a few micro-runs, not a full drain). Under
+  speculative lanes (``speculative=k`` on the batcher) the deltas carry
+  only ACCEPTED tokens — the host commits the verified draft prefix at
+  each boundary before publishing, so a client never sees a token a
+  rollback would retract, and greedy streams stay bit-exact with plain
+  continuous decode;
 * **client disconnect maps to cancellation** — a consumer that abandons
   its stream (``break``, task cancelled, connection dropped) enqueues a
   cancel that :meth:`ServeBatcher.cancel` applies at the next boundary:

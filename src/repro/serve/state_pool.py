@@ -68,9 +68,16 @@ class StatePool:
     the plan's job; the pool only tracks reuse.
     """
 
-    def __init__(self, plan, paged: Optional[Tuple[int, int]] = None):
+    def __init__(self, plan, paged: Optional[Tuple[int, int]] = None,
+                 spec: Optional[Tuple[int, int]] = None):
         self.plan = plan
         self.paged = tuple(paged) if paged else None
+        # speculative decode: (spec_k, draft_layers) — fresh states carry
+        # the draft_-prefixed layer-prefix KV twins alongside the target's
+        self.spec = tuple(spec) if spec else None
+        if self.spec is not None and self.paged is not None:
+            raise ValueError("speculative decode composes with dense "
+                             "state only")
         self.allocator = None
         if self.paged is not None:
             from repro.serve.paging import PageAllocator
@@ -89,7 +96,8 @@ class StatePool:
     def _fresh(self, bucket: BucketShape):
         batch, max_len = bucket
         if self.paged is None:
-            return self.plan.fresh_decode_state(batch, max_len)
+            return self.plan.fresh_decode_state(batch, max_len,
+                                                spec=self.spec)
         return self.plan.fresh_decode_state(batch, max_len,
                                             paged=self.paged, only="dense")
 
@@ -175,6 +183,11 @@ class StatePool:
             )
 
             sspecs = self.plan.model.decode_state_specs(batch, max_len)
+            if self.spec is not None:
+                from repro.models.base import spec_state_specs
+
+                sspecs = dict(sspecs,
+                              **spec_state_specs(sspecs, self.spec[1]))
             if self.paged is not None:
                 # pooled leaves have no batch axis (-1): the wipe skips
                 # them — a canceled request's pages go back to the

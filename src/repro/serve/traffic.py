@@ -22,7 +22,11 @@ produces exactly that, reproducibly:
   headline;
 * **abandonment** — a fraction of users lose patience and disconnect if
   the first token hasn't arrived within their patience window — the
-  async server maps that to boundary-time cancellation.
+  async server maps that to boundary-time cancellation;
+* **shared system prompts** — with ``shared_prefix_prob`` a request opens
+  with the trace's common ``shared_prefix_len``-token prefix, so the SAME
+  trace can race admission policies on dense state and prefix-cache reuse
+  on the paged pool (the PR 7 residual: traffic never touched paging).
 
 The time unit is an abstract **tick**. The traffic benchmark replays
 ticks as scheduler steps (virtual time: deterministic, CI-safe); the
@@ -77,10 +81,20 @@ class TrafficSpec:
     # abandonment: disconnect if no first token within the patience window
     abandon_prob: float = 0.0
     patience_mean: float = 30.0
+    # shared system prompt: with probability ``shared_prefix_prob`` a
+    # request opens with the SAME ``shared_prefix_len`` tokens (drawn once
+    # per trace) — the load shape that makes paged prefix reuse matter.
+    # Align the length to the page size (16) for full-page prefix hits.
+    shared_prefix_len: int = 0
+    shared_prefix_prob: float = 0.0
 
     def __post_init__(self):
         if self.rate <= 0:
             raise ValueError(f"rate must be > 0, got {self.rate}")
+        if self.shared_prefix_len < 0:
+            raise ValueError("shared_prefix_len must be >= 0")
+        if not 0 <= self.shared_prefix_prob <= 1:
+            raise ValueError("shared_prefix_prob must be in [0, 1]")
         if not 0 <= self.deadline_prob <= 1:
             raise ValueError("deadline_prob must be in [0, 1]")
         if not 0 <= self.abandon_prob <= 1:
@@ -95,6 +109,12 @@ def generate_traffic(spec: TrafficSpec, n: int, seed: int,
     rng = np.random.default_rng(seed)
     values = [p for p, _ in spec.priorities]
     weights = [w for _, w in spec.priorities]
+    # the shared system prompt is drawn ONCE per trace (seed-stable); the
+    # branch keeps prefix-free specs bit-identical to their old streams
+    prefix: List[int] = []
+    if spec.shared_prefix_len:
+        prefix = [int(x) for x in rng.integers(
+            1, spec.vocab, size=spec.shared_prefix_len)]
     out: List[TrafficRequest] = []
     t = 0.0
     for i in range(n):
@@ -106,9 +126,11 @@ def generate_traffic(spec: TrafficSpec, n: int, seed: int,
                                     * spec.output_scale), 1,
                           spec.max_new_tokens))
         prompt = [int(x) for x in rng.integers(1, spec.vocab, size=plen)]
+        if prefix and rng.random() < spec.shared_prefix_prob:
+            prompt = prefix + prompt
         priority = int(rng.choice(values, p=weights))
         tenant = f"tenant{int(rng.integers(spec.n_tenants))}"
-        min_service = plen + new - 1
+        min_service = len(prompt) + new - 1
         deadline = None
         if rng.random() < spec.deadline_prob:
             slack = float(rng.uniform(*spec.deadline_slack))
@@ -132,11 +154,28 @@ def summarize(trace: Sequence[TrafficRequest]) -> dict:
         return {"requests": 0}
     plens = [len(tr.request.prompt) for tr in trace]
     news = [tr.request.max_new_tokens for tr in trace]
+    # longest prompt prefix shared by the largest same-first-token group:
+    # >= a page (16 tokens) across many requests means paged prefix
+    # reuse has something to hit on this trace
+    prompts = [list(tr.request.prompt) for tr in trace]
+    groups: dict = {}
+    for p in prompts:
+        groups.setdefault(p[0], []).append(p)
+    biggest = max(groups.values(), key=len)
+    shared_len = 0
+    if len(biggest) >= 2:
+        shared_len = min(len(p) for p in biggest)
+        for j in range(shared_len):
+            if len({p[j] for p in biggest}) > 1:
+                shared_len = j
+                break
     return {
         "requests": len(trace),
         "span_ticks": round(trace[-1].at, 2),
         "prompt_len": {"p50": int(np.median(plens)), "max": max(plens)},
         "new_tokens": {"p50": int(np.median(news)), "max": max(news)},
+        "shared_prefix": {"len": shared_len,
+                          "requests": len(biggest) if shared_len else 0},
         "deadlined": sum(tr.request.deadline is not None for tr in trace),
         "abandoning": sum(tr.patience is not None for tr in trace),
         "priorities": {

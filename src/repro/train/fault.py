@@ -52,6 +52,10 @@ class StragglerMonitor:
             self._n > self.warmup and dt > self.threshold * self.ewma
         )
         if is_straggler:
+            # "time" is a wall-clock EVENT TIMESTAMP (log correlation
+            # only) — interval math must come in through ``dt``, which
+            # the trainer measures with time.perf_counter(): wall-clock
+            # deltas jump under NTP slew and once spoofed this monitor
             self.events.append(
                 {"step": step, "dt": dt, "ewma": self.ewma, "time": time.time()}
             )

@@ -155,11 +155,14 @@ class Trainer:
                 if self.injector is not None:
                     self.injector.check(step)
                 batch = {k: jnp.asarray(v) for k, v in next(data).items()}
-                t0 = time.time()
+                # monotonic interval clock: time.time() is wall-clock and
+                # jumps under NTP slew/DST, which spoofed the straggler
+                # monitor with negative or huge step durations
+                t0 = time.perf_counter()
                 params, opt_state, residuals, metrics = self._step_fn(
                     params, opt_state, residuals, batch)
                 loss = float(metrics["loss"])
-                dt = time.time() - t0
+                dt = time.perf_counter() - t0
                 straggle = self.monitor.observe(step, dt)
                 history.append({"step": step, "loss": loss, "dt": dt})
                 if step % cfg.log_every == 0 or step == cfg.steps - 1:

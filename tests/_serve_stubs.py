@@ -133,6 +133,124 @@ def check_invariants(sched, reqs, results, k, canceled=(), shed=()):
         assert 1 <= sched.max_refill_gap <= k
 
 
+class SpecHostExe:
+    """Fake fused speculative executable: LOCAL positional receipts.
+
+    ``verify[i, b] = (pos + i - start[i, b]) + 1`` — one past the lane's
+    local cursor, so a step's value depends only on how many tokens the
+    slot has actually consumed, never on which micro-run replayed it.
+    The scheduler's rollback bumps ``slot.start`` by exactly the
+    rejected count, so the committed stream for a request with prompt
+    length P must be exactly ``[P, P+1, ..., P+n-1]`` no matter how many
+    drafts were rejected, requeued, or replayed along the way: the
+    accept-prefix law as an arithmetic identity on receipts.
+
+    ``drafts`` mirrors ``verify`` except where the lane's local cursor
+    sits in ``mismatch`` — those steps propose a wrong token, forcing
+    the host to roll back every later step of that micro-run.
+    """
+
+    def __init__(self, mismatch=frozenset()):
+        self.bundle = types.SimpleNamespace(in_shardings=(None,) * 8)
+        self.calls = 0
+        self.mismatch = frozenset(mismatch)
+
+    def compiled(self, params, state, feed, prev, pos, start, active,
+                 fresh):
+        self.calls += 1
+        active = np.asarray(active)
+        start = np.asarray(start)
+        k, B = active.shape
+        local = (int(pos) + np.arange(k, dtype=np.int32)[:, None]
+                 - start)                       # [k, B] local cursor
+        verify = ((local + 1) * active).astype(np.int32)
+        drafts = verify.copy()
+        if self.mismatch:
+            bad = np.isin(local, list(self.mismatch)) & active
+            drafts[bad] += 997                  # draft disagrees here
+        return verify, drafts, state
+
+
+class SpecHostPlan:
+    """Plan stand-in: one SpecHostExe per (batch, max_len, k, spec)."""
+
+    def __init__(self, mismatch=frozenset()):
+        self.exes = {}
+        self.mismatch = frozenset(mismatch)
+
+    def serve_executable(self, kind, *, batch, max_len,
+                         steps_per_dispatch=1, spec=None, **kw):
+        assert kind == "masked_decode" and spec is not None
+        key = (batch, max_len, steps_per_dispatch, spec)
+        if key not in self.exes:
+            self.exes[key] = SpecHostExe(self.mismatch)
+        return self.exes[key]
+
+
+def spec_expected_receipt(plen, n):
+    """Local receipts: token j of a prompt-P request is P + j."""
+    return list(range(plen, plen + n))
+
+
+def run_spec_host_trace(lengths, k, batch, max_len=64, mismatch=(),
+                        cancel_at=None, reqs=None):
+    """Drive the real scheduler in SPECULATIVE mode over the host fakes.
+
+    ``mismatch`` is a set of local cursor positions where the fake draft
+    proposes a wrong token (forcing a rollback of everything after it in
+    that micro-run). Returns ``(sched, reqs, results, canceled)``.
+    """
+    policy = BucketPolicy([Bucket(max_len, batch)])
+    sched = ContinuousScheduler(SpecHostPlan(mismatch), policy,
+                                NullPool(), steps_per_dispatch=k,
+                                spec=(k, 1))
+    if reqs is None:
+        reqs = [DecodeRequest(
+            f"s{i}", [1 + (i + j) % 7 for j in range(plen)],
+            max_new_tokens=n)
+            for i, (plen, n) in enumerate(lengths)]
+    canceled = []
+    if cancel_at is not None:
+        boundary, idx = cancel_at
+        rid = reqs[idx % len(reqs)].request_id
+
+        def hook(pos, slots):
+            if pos >= boundary and rid not in canceled and any(
+                    s is not None and s.req.request_id == rid
+                    for s in slots):
+                sched.cancel(rid)
+                canceled.append(rid)
+
+        sched.on_boundary = hook
+    pending = collections.deque(reqs)
+    results = sched.run(pending, None, {})
+    return sched, reqs, results, canceled
+
+
+def check_spec_invariants(sched, reqs, results, canceled=()):
+    """Conservation + local receipts + no leaked carry, spec mode.
+
+    Every non-canceled id completes exactly once with EXACTLY its
+    ``max_new_tokens`` receipts ``[P, ..., P+n-1]`` — rollbacks and
+    continuation requeues may stretch the schedule but can never change,
+    duplicate, or drop a committed token — and the continuation carry
+    map must be empty once ``run()`` returns.
+    """
+    canceled = set(canceled)
+    assert set(results) == {r.request_id for r in reqs} - canceled
+    by_id = {r.request_id: r for r in reqs}
+    for rid, res in results.items():
+        req = by_id[rid]
+        exp = spec_expected_receipt(len(req.prompt), req.max_new_tokens)
+        if sched.spec_partial_results:
+            # a continuation outgrew every bucket: the committed prefix
+            # is delivered as-is — still exact, still non-empty
+            assert res.tokens and res.tokens == exp[:len(res.tokens)], rid
+        else:
+            assert res.tokens == exp, rid
+    assert sched._spec_carry == {}, "continuation carry leaked past run()"
+
+
 def run_host_trace(lengths, k, batch, max_len=64, cancel_at=None,
                    admission=None, reqs=None):
     """Drive the real scheduler over the host fakes; returns

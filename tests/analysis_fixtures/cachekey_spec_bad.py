@@ -1,0 +1,43 @@
+"""Known-bad fixture for RA201: the speculative-decode regression.
+
+Never imported. This is the exact mistake ISSUE 9 guards against:
+``spec_k``/``draft_layers`` change the compiled computation (the fused
+draft+verify scan has a different program for every draft signature) but
+the cache key only carries batch geometry. Two plans differing only in
+the draft signature would silently share one executable — the second one
+would run the wrong program with zero error.
+"""
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheKey:
+    arch: str
+    batch: int
+    max_len: int
+    steps: int = 1
+
+
+def make_fake_spec_step(arch, batch, max_len, spec_k, draft_layers):
+    return (arch, batch, max_len, spec_k, draft_layers)
+
+
+class MiniSpecPlan:
+    def __init__(self, arch, cache):
+        self.arch = arch
+        self.cache = cache
+
+    def _key(self, batch, max_len, steps=1, spec_k=0, draft_layers=0):
+        # BUG: spec_k and draft_layers shape the executable (they pick
+        # the draft prefix and the lane count of the fused scan) but
+        # never reach CacheKey.
+        return CacheKey(arch=self.arch, batch=batch, max_len=max_len,
+                        steps=steps)
+
+    def serve_executable(self, batch, max_len, steps=1, spec_k=0,
+                         draft_layers=0):
+        build = lambda: make_fake_spec_step(  # noqa: E731
+            self.arch, batch, max_len, spec_k, draft_layers)
+        key = self._key(batch, max_len, steps=steps)  # BUG: spec unkeyed
+        return self.cache.get_or_build(key, build)

@@ -126,9 +126,9 @@ def test_cachekey_rule_catches_synthetic_kwarg_in_real_plan(tmp_path):
         "def serve_executable(self, kind: str, *, batch: int, "
         "max_len: int,\n                         fusion_mode: int = 0,")
     patched = patched.replace(
-        "steps_per_dispatch=steps_per_dispatch, paged=paged)",
+        "steps_per_dispatch=steps_per_dispatch, paged=paged, spec=spec)",
         "steps_per_dispatch=steps_per_dispatch + fusion_mode, "
-        "paged=paged)")
+        "paged=paged, spec=spec)")
     assert patched != plan_src, "plan.py drifted; update the patch anchors"
     work = tmp_path / "plan"
     work.mkdir()
@@ -148,6 +148,18 @@ def test_cachekey_rule_catches_synthetic_kwarg_in_real_plan(tmp_path):
     (clean / "plan.py").write_text(plan_src)
     (clean / "cache.py").write_text(cache_src)
     assert analyze([str(clean)], rules=["RA201"], baseline=None).ok
+
+
+def test_cachekey_rule_catches_unkeyed_draft_signature():
+    """The speculative-decode shape of the same bug: ``spec_k`` and
+    ``draft_layers`` pick the compiled program but are dropped by the
+    key method. Both fields must be flagged — missing either one means
+    two different draft signatures share an executable."""
+    report = run_rule("RA201", "cachekey_spec_bad.py")
+    assert not report.ok
+    messages = " | ".join(f.message for f in report.findings)
+    assert "spec_k" in messages
+    assert "draft_layers" in messages
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,293 @@
+"""Speculative decoding lanes: host accept/rollback law + greedy parity.
+
+Two layers of evidence, mirroring the scheduler suite:
+
+* **host-fake property tests** — the REAL :class:`ContinuousScheduler`
+  in spec mode over ``_serve_stubs.SpecHostExe``, whose verify lane
+  emits LOCAL positional receipts (``local cursor + 1``). Receipts make
+  the accept-prefix law an arithmetic identity: whatever mismatch
+  schedule the fake draft plays — rollbacks, continuation requeues,
+  cancels mid-speculation, chunked prefill — every completed request
+  must hold exactly ``[P, P+1, ..., P+n-1]``. Conservation, carry
+  hygiene, and guaranteed progress ride along;
+* **real-model parity matrix** — speculation is an ACCELERATION, never
+  a model change: greedy streams with ``speculative=k`` are asserted
+  token-identical to plain continuous decode for k in {1, 4}, float and
+  ``quantized=True`` alike, on gap-robust prompts (top-2 logit gaps
+  clear float rounding, so block-verify's k-position scoring cannot
+  flip a tie), across slot reuse, plus a rollback-stress run with the
+  shallowest possible draft and zero post-warmup lowerings.
+"""
+
+import jax
+import numpy as np
+import pytest
+from _serve_stubs import (
+    check_spec_invariants,
+    run_spec_host_trace,
+    spec_expected_receipt,
+)
+from conftest import hypothesis_or_skip_stub
+
+from repro.configs import reduced_config
+from repro.dist.sharding import init_params
+from repro.launch.mesh import make_debug_mesh
+from repro.models import build_model
+from repro.serve import Bucket, BucketPolicy, DecodeRequest, ServeBatcher
+
+given, settings, st = hypothesis_or_skip_stub()
+
+
+# ---------------------------------------------------------------------------
+# host-fake property tests: the accept/rollback law on the real scheduler
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(8))
+@pytest.mark.parametrize("k", [1, 2, 4, 8])
+def test_spec_invariants_seeded_streams(seed, k):
+    """Random arrival/length streams x random mismatch schedules x
+    optional mid-speculation cancel: receipts, conservation, carry."""
+    rng = np.random.default_rng(seed)
+    lengths = [(int(rng.integers(1, 7)), int(rng.integers(1, 13)))
+               for _ in range(int(rng.integers(1, 24)))]
+    mismatch = {int(p) for p in rng.integers(0, 40,
+                                             size=int(rng.integers(0, 12)))}
+    cancel_at = ((int(rng.integers(0, 24)), int(rng.integers(0, 64)))
+                 if rng.random() < 0.5 else None)
+    sched, reqs, results, canceled = run_spec_host_trace(
+        lengths, k, batch=int(rng.integers(1, 4)), mismatch=mismatch,
+        cancel_at=cancel_at)
+    check_spec_invariants(sched, reqs, results, canceled)
+    assert sched.cancellations == len(canceled)
+
+
+@given(st.lists(st.tuples(st.integers(min_value=1, max_value=6),
+                          st.integers(min_value=1, max_value=12)),
+                min_size=1, max_size=24),
+       st.sampled_from([2, 4, 8]),
+       st.integers(min_value=1, max_value=3),
+       st.sets(st.integers(min_value=0, max_value=40), max_size=16))
+@settings(max_examples=80, deadline=None)
+def test_accept_prefix_law_property(lengths, k, batch, mismatch):
+    """The committed stream is invariant under the draft's mistakes:
+    any mismatch schedule only stretches the schedule (rollbacks,
+    requeues), never changes, drops, or duplicates a receipt."""
+    sched, reqs, results, _ = run_spec_host_trace(
+        lengths, k, batch, mismatch=mismatch)
+    check_spec_invariants(sched, reqs, results)
+    if not mismatch:
+        assert sched.spec_rollbacks == 0
+
+
+@given(st.lists(st.tuples(st.integers(min_value=1, max_value=6),
+                          st.integers(min_value=1, max_value=12)),
+                min_size=2, max_size=16),
+       st.sampled_from([2, 4]),
+       st.integers(min_value=0, max_value=20),
+       st.integers(min_value=0, max_value=23),
+       st.sets(st.integers(min_value=0, max_value=40), max_size=12))
+@settings(max_examples=60, deadline=None)
+def test_spec_conservation_under_cancellation(lengths, k, boundary, idx,
+                                              mismatch):
+    """Cancelling a request mid-speculation (possibly mid-rollback)
+    never breaks conservation: the canceled id completes zero times and
+    leaks no carry; everyone else keeps exact receipts."""
+    sched, reqs, results, canceled = run_spec_host_trace(
+        lengths, k, batch=2, mismatch=mismatch,
+        cancel_at=(boundary * k, idx))
+    check_spec_invariants(sched, reqs, results, canceled)
+
+
+def test_chunked_prefill_meets_speculation():
+    """A prompt many micro-runs long feeds in k-token chunks (feeds are
+    never rolled back), then decodes speculatively through a hostile
+    mismatch schedule — receipts stay exact and prefill still amortizes."""
+    sched, reqs, results, _ = run_spec_host_trace(
+        [(40, 6)], 8, batch=1, max_len=128, mismatch=set(range(0, 60, 3)))
+    check_spec_invariants(sched, reqs, results)
+    assert results["s0"].tokens == spec_expected_receipt(40, 6)
+    # 40 feed steps cost ceil(40/8)=5 micro-runs, not 40
+    assert sched.spec_rollbacks > 0
+
+
+def test_rollbacks_requeue_as_continuations():
+    """A draft that is wrong at every position burns ~k-1 bucket
+    positions per committed token, exhausting the window: the slot must
+    requeue as a continuation (prompt := prompt + committed) and the
+    final stream must still be exact, with no leaked carry."""
+    sched, reqs, results, _ = run_spec_host_trace(
+        [(2, 12)], 8, batch=1, max_len=32, mismatch=set(range(64)))
+    check_spec_invariants(sched, reqs, results)
+    assert sched.spec_continuations >= 1
+    assert sched.spec_rollbacks >= 3
+    assert results["s0"].tokens == spec_expected_receipt(2, 12)
+
+
+def test_continuation_outgrowing_bucket_delivers_partial():
+    """When rollbacks stretch a continuation's need past every bucket,
+    the committed prefix is delivered rather than dropped (and counted
+    as a partial result)."""
+    sched, reqs, results, _ = run_spec_host_trace(
+        [(2, 20)], 8, batch=1, max_len=32, mismatch=set(range(64)))
+    check_spec_invariants(sched, reqs, results)
+    assert sched.spec_partial_results >= 1
+    toks = results["s0"].tokens
+    assert toks == spec_expected_receipt(2, len(toks))
+
+
+def test_spec_counters_and_stats_shape():
+    """Counter arithmetic: a perfect draft accepts every drafted token,
+    the stats block exposes the acceptance headline, and feeds are never
+    counted as draft work."""
+    sched, reqs, results, _ = run_spec_host_trace(
+        [(2, 9), (3, 7)], 4, batch=2)
+    check_spec_invariants(sched, reqs, results)
+    s = sched.stats()["spec"]
+    assert s["spec_k"] == 4 and s["draft_layers"] == 1
+    assert s["rollbacks"] == 0 and s["continuations"] == 0
+    assert s["draft_tokens"] == s["accepted_tokens"] > 0
+    assert s["accepted_tokens_per_dispatch"] > 1
+
+
+# ---------------------------------------------------------------------------
+# real-model parity matrix: spec on/off x k in {1, 4} x {float, quantized}
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return reduced_config("yi_6b").with_(n_layers=2, vocab=64)
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_debug_mesh(1, 1)
+
+
+@pytest.fixture(scope="module")
+def params(cfg, test_seed):
+    return init_params(jax.random.PRNGKey(test_seed),
+                       build_model(cfg).param_specs())
+
+
+# gap-robust prompts (the paged-benchmark trick): tails spread across
+# the vocab so every decode step's top-2 logit gap clears BOTH float
+# rounding noise and the ~0.05 int8 quantization noise — block-verify
+# re-associates sums and evaluates RoPE at LOCAL positions, which
+# yields equal scores but not bitwise-equal floats, and the quantized
+# head can flip ties narrower than its resolution (the int8 contract)
+_SPEC_TRACE = [
+    (f"g{i}", [2 + (7 * i + 13 * j) % 50 for j in range(2 + i % 3)],
+     4 + i % 4)
+    for i in range(6)
+]
+
+_POLICY = BucketPolicy([Bucket(32, 2)])
+
+
+@pytest.fixture(scope="module")
+def continuous_reference(cfg, mesh, params):
+    """Plain continuous greedy tokens per (k, variant), lazily built."""
+    cache = {}
+
+    def get(k, quantized):
+        key = (k, quantized)
+        if key not in cache:
+            with mesh:
+                b = ServeBatcher(cfg, mesh, quantized=quantized,
+                                 policy=_POLICY, schedule="continuous",
+                                 steps_per_dispatch=k).load_params(params)
+                for rid, p, n in _SPEC_TRACE:
+                    b.submit(DecodeRequest(rid, p, max_new_tokens=n))
+                cache[key] = {r: v.tokens for r, v in b.run().items()}
+        return cache[key]
+
+    return get
+
+
+@pytest.mark.parametrize("k", [1, 4])
+@pytest.mark.parametrize("quantized", [False, True],
+                         ids=["float", "quantized"])
+def test_speculative_matches_plain_continuous(cfg, mesh, params, k,
+                                              quantized,
+                                              continuous_reference):
+    """Greedy streams with speculation on are token-identical to plain
+    continuous decode at the same k — acceptance commits exactly the
+    target's argmax stream, rollbacks are invisible in the output, and
+    the stats expose the lane's accounting."""
+    ref = continuous_reference(k, quantized)
+    with mesh:
+        b = ServeBatcher(cfg, mesh, quantized=quantized, policy=_POLICY,
+                         schedule="continuous", steps_per_dispatch=k,
+                         speculative=k).load_params(params)
+        for rid, p, n in _SPEC_TRACE:
+            b.submit(DecodeRequest(rid, p, max_new_tokens=n))
+        res = {r: v.tokens for r, v in b.run().items()}
+    for rid, _, n in _SPEC_TRACE:
+        assert res[rid] == ref[rid], (k, quantized, rid)
+        assert len(res[rid]) == n
+    s = b.scheduler.stats()["spec"]
+    assert s["spec_k"] == k
+    assert s["verifies"] > 0
+    assert 0 < s["accepted_tokens"] <= s["draft_tokens"]
+    assert b.scheduler.refills > 0     # parity held ACROSS slot reuse
+
+
+def test_rollback_stress_shallow_draft(cfg, mesh, params,
+                                       continuous_reference):
+    """draft='prefix:1' under random weights disagrees with the 2-layer
+    target constantly — maximum rollback pressure — and the stream must
+    STILL match plain continuous decode exactly."""
+    ref = continuous_reference(4, False)
+    with mesh:
+        b = ServeBatcher(cfg, mesh, policy=_POLICY, schedule="continuous",
+                         steps_per_dispatch=4, speculative=4,
+                         draft="prefix:1").load_params(params)
+        for rid, p, n in _SPEC_TRACE:
+            b.submit(DecodeRequest(rid, p, max_new_tokens=n))
+        res = {r: v.tokens for r, v in b.run().items()}
+    for rid, _, _ in _SPEC_TRACE:
+        assert res[rid] == ref[rid], rid
+    assert b.scheduler.stats()["spec"]["rollbacks"] > 0
+    assert b.scheduler._spec_carry == {}
+
+
+def test_speculative_zero_new_lowerings_after_warmup(cfg, mesh, params):
+    """A second wave (different lengths) runs entirely on the one warm
+    fused executable: speculation must not fragment the cache."""
+    with mesh:
+        b = ServeBatcher(cfg, mesh, policy=_POLICY, schedule="continuous",
+                         steps_per_dispatch=4,
+                         speculative=4).load_params(params)
+        for rid, p, n in _SPEC_TRACE:
+            b.submit(DecodeRequest(rid, p, max_new_tokens=n))
+        b.run()
+        warm = b.cache.stats()["lowerings"]
+        for rid, p, n in _SPEC_TRACE:
+            b.submit(DecodeRequest("w" + rid, p[::-1],
+                                   max_new_tokens=n + 1))
+        b.run()
+    assert b.cache.stats()["lowerings"] == warm
+    keys = [key for key in b.cache._entries if key.kind == "masked_decode"]
+    assert keys and all(key.spec == (4, 1) for key in keys)
+
+
+def test_speculative_validation_errors(cfg, mesh):
+    """The lane's preconditions fail loudly at construction time."""
+    with pytest.raises(ValueError, match="continuous"):
+        ServeBatcher(cfg, mesh, speculative=1)
+    with pytest.raises(ValueError, match="steps_per_dispatch"):
+        ServeBatcher(cfg, mesh, schedule="continuous",
+                     steps_per_dispatch=2, speculative=4)
+    with pytest.raises(ValueError, match="draft"):
+        ServeBatcher(cfg, mesh, schedule="continuous", draft="prefix:1")
+    with pytest.raises(ValueError, match="prefix"):
+        ServeBatcher(cfg, mesh, schedule="continuous", steps_per_dispatch=2,
+                     speculative=2, draft="suffix:1")
+    with pytest.raises(ValueError, match="depth|\\[1,"):
+        ServeBatcher(cfg, mesh, schedule="continuous", steps_per_dispatch=2,
+                     speculative=2, draft="prefix:9")
+    with pytest.raises(ValueError, match="dense"):
+        ServeBatcher(cfg, mesh, schedule="continuous", steps_per_dispatch=2,
+                     speculative=2, paged=True)

@@ -134,6 +134,38 @@ def test_straggler_monitor_flags_outliers():
     assert mon.ewma < 1.5
 
 
+def test_step_timing_immune_to_wall_clock_jumps(tmp_path, monkeypatch):
+    """Step durations use the monotonic clock: a wall-clock jump (NTP
+    slew, DST) mid-run must not spoof the straggler monitor or record
+    negative/huge dt values in the history."""
+    import repro.train.trainer as trainer_mod
+
+    model, params, opt = _tiny_setup()
+    # wall clock that jumps an hour backward, then forward, every call —
+    # if fit() still measured intervals with time.time() every dt would
+    # be +-3600s and the monitor would flag (or mask) everything
+    base = [1_000_000.0]
+
+    def jumping_wall_clock():
+        base[0] += 3600.0 if len(mon_calls) % 2 else -3600.0
+        mon_calls.append(None)
+        return base[0]
+
+    mon_calls = []
+    monkeypatch.setattr(trainer_mod.time, "time", jumping_wall_clock)
+    cfg = TrainerConfig(steps=5, ckpt_every=100, log_every=100,
+                        ckpt_dir=str(tmp_path / "clock"))
+    t = Trainer(model.loss, opt, cfg)
+    _, _, hist = t.fit(jax.tree.map(lambda x: x.copy(), params),
+                       opt.init(params), _iter_factory(), resume=False)
+    assert len(hist) == 5
+    for h in hist:
+        assert 0.0 <= h["dt"] < 3600.0, h
+    # tiny identical steps: the jumping wall clock must not have spoofed
+    # a straggler (a 3600s "dt" is > threshold x ewma by any margin)
+    assert t.monitor.events == []
+
+
 def test_grad_accumulation_matches_full_batch(tmp_path):
     """microbatches=2 gives the same loss trajectory as full batch (linear
     loss in batch => identical gradients)."""
