@@ -82,6 +82,7 @@ from repro.serve import (
     generate_traffic,
     make_policy,
 )
+from repro.serve.batcher import quantile
 from repro.serve.traffic import summarize
 
 WAVES = 4          # warm waves measured (one cold wave discarded)
@@ -477,6 +478,115 @@ def measure_speculative(waves: int = 3) -> dict:
     return out
 
 
+# spec_paged section: the ISSUE-10 composition — the SAME doctored-draft
+# race as the speculative section, but the paged racer routes draft AND
+# verify KV writes through revocable draft-page leases on the shared
+# page pool. Every request opens with a one-page shared system prompt so
+# the prefix cache stays observable: paging must keep its skip-rate rent
+# while speculation borrows (and rolls back) pages at the micro-run
+# boundary. Gates: token-count parity, paged spec tok/s >= 0.9x dense
+# spec, acceptance rate within 0.05 of dense spec, prefill skip rate
+# > 0, draft leases actually cycling, zero post-warmup lowerings.
+SPEC_PAGED_SYSTEM = tuple(2 + (13 * j) % 50 for j in range(16))
+
+
+def spec_paged_requests(tag: str, n: int = SPEC_REQUESTS):
+    # one-page shared prefix + the gap-robust per-request tails of
+    # spec_requests, so prefix reuse and draft/target agreement are both
+    # model facts rather than tie accidents
+    reqs = []
+    for i in range(n):
+        tail = [2 + (7 * (i + 1) + 13 * j) % 50 for j in range(2 + i % 3)]
+        reqs.append(DecodeRequest(
+            f"{tag}-{i}", list(SPEC_PAGED_SYSTEM) + tail,
+            max_new_tokens=SPEC_TOKENS))
+    return reqs
+
+
+SPEC_PAGED_CONFIGS = (
+    ("dense_spec", dict(schedule="continuous", steps_per_dispatch=SPEC_K,
+                        speculative=SPEC_K,
+                        draft=f"prefix:{SPEC_DRAFT_LAYERS}")),
+    # page_size 4 (not the default 16): short benchmark sequences must
+    # OUTGROW their lazily-admitted prompt pages, or every draft write
+    # lands in already-owned pages and the lease machinery never runs
+    ("paged_spec", dict(schedule="continuous", steps_per_dispatch=SPEC_K,
+                        speculative=SPEC_K,
+                        draft=f"prefix:{SPEC_DRAFT_LAYERS}",
+                        paged=4)),
+)
+
+
+def measure_spec_paged(waves: int = 3) -> dict:
+    """Race dense-state spec lanes vs paged spec lanes, same trace."""
+    cfg = reduced_config(ARCH).with_(n_layers=SPEC_LAYERS, vocab=64)
+    policy = BucketPolicy([Bucket(CHURN_MAX_LEN, CHURN_BATCH)])
+    out = {}
+    token_counts = {}
+    for label, kw in SPEC_PAGED_CONFIGS:
+        plan = build_plan(cfg, None, mesh_spec=MeshSpec.debug(1, 1))
+        with plan.activate():
+            b = plan.make_batcher(policy=policy, **kw)
+            b.load_params(_doctored_draft_params(plan))
+            for r in spec_paged_requests("cold"):
+                b.submit(r)
+            b.run()                    # compile + warm the bucket
+            warm_cache = dict(b.cache.stats())
+            cold_spec = dict(b.scheduler.stats().get("spec", {}))
+            b.metrics = {}
+            t0 = time.perf_counter()
+            tokens = 0
+            for w in range(waves):
+                for r in spec_paged_requests(f"warm{w}"):
+                    b.submit(r)
+                res = b.run()
+                tokens += sum(len(r.tokens) for r in res.values())
+            dt = time.perf_counter() - t0
+        after = b.cache.stats()
+        token_counts[label] = tokens
+        s = b.scheduler.stats()["spec"]
+        accepted = s["accepted_tokens"] - cold_spec["accepted_tokens"]
+        drafted = s["draft_tokens"] - cold_spec["draft_tokens"]
+        verifies = s["verifies"] - cold_spec["verifies"]
+        entry = {
+            "tokens": tokens,
+            "seconds": round(dt, 4),
+            "tokens_per_second": round(tokens / dt, 2) if dt else 0.0,
+            "new_lowerings_after_warmup":
+                after["lowerings"] - warm_cache["lowerings"],
+            "spec": {
+                "spec_k": s["spec_k"],
+                "verifies": verifies,
+                "draft_tokens": drafted,
+                "accepted_tokens": accepted,
+                "rollbacks": s["rollbacks"] - cold_spec["rollbacks"],
+                "acceptance_rate": round(accepted / drafted, 4)
+                if drafted else 0.0,
+                "accepted_tokens_per_dispatch": round(accepted / verifies, 3)
+                if verifies else 0.0,
+            },
+        }
+        if label == "paged_spec":
+            entry["allocator"] = b.stats()["paged"]
+        out[label] = entry
+    assert token_counts["paged_spec"] == token_counts["dense_spec"], (
+        "paged speculative decode generated a different token count than "
+        f"dense speculative on the same trace: {token_counts}")
+    out["tokens_match"] = True
+    out["speedup_paged_spec_vs_dense_spec"] = round(
+        out["paged_spec"]["tokens_per_second"]
+        / out["dense_spec"]["tokens_per_second"], 3) \
+        if out["dense_spec"]["tokens_per_second"] else 0.0
+    out["acceptance_rate_delta"] = round(
+        out["paged_spec"]["spec"]["acceptance_rate"]
+        - out["dense_spec"]["spec"]["acceptance_rate"], 4)
+    alloc = out["paged_spec"]["allocator"]
+    out["prefill_skip_rate"] = alloc["prefill_skip_rate"]
+    out["draft_pages_committed"] = alloc["draft_pages_committed"]
+    out["draft_pages_rolled_back"] = alloc["draft_pages_rolled_back"]
+    return out
+
+
 # traffic section: one overloaded Poisson trace (arrival rate ~2x the
 # bucket's service capacity) so admission order actually matters, replayed
 # per policy in virtual time — on dense state AND again through the shared
@@ -498,8 +608,7 @@ ASYNC_TICK_S = 0.02                 # wall-clock seconds per trace tick
 
 
 def _pct(vals, p):
-    v = sorted(vals)
-    return round(v[min(len(v) - 1, int(p * len(v)))], 3) if v else 0.0
+    return round(quantile(vals, p), 3)
 
 
 def _traffic_batcher(admission_name=None, paged: bool = False):
@@ -742,6 +851,7 @@ def measure(waves: int = WAVES, tokens: int = TOKENS,
         "churn": measure_churn(),
         "paged": measure_paged(),
         "speculative": measure_speculative(),
+        "spec_paged": measure_spec_paged(),
     }
     if traffic:
         out["traffic"] = measure_traffic()
@@ -813,6 +923,38 @@ def _report_speculative(spec: dict) -> None:
         "is near-perfect")
 
 
+def _report_spec_paged(sp: dict) -> None:
+    """Print + gate the spec_paged section (shared by --only spec_paged)."""
+    for label, _ in SPEC_PAGED_CONFIGS:
+        p = sp[label]
+        print(f"spec_paged/{label}: {p['tokens_per_second']} tok/s, "
+              f"acceptance rate {p['spec']['acceptance_rate']} "
+              f"({p['spec']['rollbacks']} rollbacks)")
+        assert p["new_lowerings_after_warmup"] == 0, \
+            f"spec_paged/{label} lowered after warmup"
+    print(f"spec_paged: speedup paged/dense "
+          f"{sp['speedup_paged_spec_vs_dense_spec']}x (gate: >= 0.9), "
+          f"acceptance delta {sp['acceptance_rate_delta']} "
+          f"(gate: |.| <= 0.05), prefix skip rate "
+          f"{sp['prefill_skip_rate']} (gate: > 0), draft leases "
+          f"{sp['draft_pages_committed']} pages committed / "
+          f"{sp['draft_pages_rolled_back']} rolled back")
+    assert sp["tokens_match"]
+    assert sp["speedup_paged_spec_vs_dense_spec"] >= 0.9, (
+        "paged speculative lanes ran < 0.9x the dense-state spec racer "
+        "on the same trace — draft-page leasing must stay a memory-"
+        "layout change, not a throughput regression")
+    assert abs(sp["acceptance_rate_delta"]) <= 0.05, (
+        "paged spec acceptance drifted from dense spec — draft KV twins "
+        "riding the page table must see the same context as dense state")
+    assert sp["prefill_skip_rate"] > 0, (
+        "paged speculative replay produced no prefill skips on a shared-"
+        "prefix trace — leasing draft pages must not break prefix reuse")
+    assert sp["draft_pages_committed"] > 0, (
+        "no draft pages were ever committed — the lease path never "
+        "engaged, so this section measured nothing")
+
+
 def _report_traffic(traffic: dict) -> None:
     """Print + gate the traffic section (shared by --only traffic)."""
     for name in TRAFFIC_POLICIES:
@@ -861,12 +1003,15 @@ def main():
     ap.add_argument("--waves", type=int, default=WAVES)
     ap.add_argument("--tokens", type=int, default=TOKENS)
     ap.add_argument("--only", default="all",
-                    choices=["all", "traffic", "paged", "speculative"],
+                    choices=["all", "traffic", "paged", "speculative",
+                             "spec_paged"],
                     help="'traffic' runs just the admission-policy / "
                          "async replay section (the CI traffic-smoke job); "
                          "'paged' just the paged-vs-dense KV race; "
                          "'speculative' just the draft-lane race "
-                         "(the CI spec-smoke job)")
+                         "(the CI spec-smoke job); 'spec_paged' just the "
+                         "draft-lease race over the page pool (the CI "
+                         "spec-smoke paged replay)")
     args = ap.parse_args()
     if args.only == "speculative":
         data = {"speculative": measure_speculative()}
@@ -875,6 +1020,14 @@ def main():
             f.write("\n")
         _report_speculative(data["speculative"])
         print(f"wrote {args.out} (speculative section only)")
+        return
+    if args.only == "spec_paged":
+        data = {"spec_paged": measure_spec_paged()}
+        with open(args.out, "w") as f:
+            json.dump(data, f, indent=2, sort_keys=True)
+            f.write("\n")
+        _report_spec_paged(data["spec_paged"])
+        print(f"wrote {args.out} (spec_paged section only)")
         return
     if args.only == "traffic":
         data = {"traffic": measure_traffic()}
@@ -917,6 +1070,7 @@ def main():
                 f"{label} scheduler lowered after warmup under churn"
     _report_paged(data["paged"])
     _report_speculative(data["speculative"])
+    _report_spec_paged(data["spec_paged"])
     _report_traffic(data["traffic"])
     print(f"wrote {args.out} (cache hits={hits}, "
           f"compiles={data['warm_cache']['compiles']})")

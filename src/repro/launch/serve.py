@@ -57,14 +57,16 @@ Flags:
                prefill-skip rate) after the waves. See
                docs/memory_model.md.
   --speculative K
-               speculative decode lanes (needs --schedule continuous,
-               incompatible with --paged): a layer-prefix draft proposes
-               K tokens per micro-run and the full target verifies them
-               in the same fused dispatch; K must equal
-               --steps-per-dispatch. Accepted tokens are committed at
-               micro-run boundaries, rejections roll the slot back.
-               Greedy streams stay bit-exact. Prints the acceptance
-               counters after the waves. See docs/serving.md.
+               speculative decode lanes (needs --schedule continuous):
+               a layer-prefix draft proposes K tokens per micro-run and
+               the full target verifies them in the same fused dispatch;
+               K must equal --steps-per-dispatch. Accepted tokens are
+               committed at micro-run boundaries, rejections roll the
+               slot back. Greedy streams stay bit-exact. Composes with
+               --paged: draft+verify writes land in revocable draft-page
+               leases that commit or roll back with the tokens (see
+               docs/memory_model.md). Prints the acceptance counters
+               after the waves. See docs/serving.md.
   --draft      draft model spec for --speculative: "prefix:N" runs the
                first N layers of the target as a self-speculative draft
                (default: half the stack).
@@ -116,7 +118,8 @@ continuous-batching extras (all need --schedule continuous):
   --paged [PAGE_SIZE]      paged KV cache with shared-prefix prefill
                            skipping (docs/memory_model.md)
   --speculative K          fused draft+verify lanes, K = micro-run length
-                           (greedy streams stay bit-exact)
+                           (greedy streams stay bit-exact; composes with
+                           --paged via revocable draft-page leases)
 
 examples:
   %(prog)s --arch yi-6b --debug --schedule continuous \\
@@ -165,7 +168,7 @@ examples:
                     help="speculative decode: draft K tokens per micro-run "
                          "and verify them in the same fused dispatch "
                          "(needs --schedule continuous; K must equal "
-                         "--steps-per-dispatch; not with --paged)")
+                         "--steps-per-dispatch; composes with --paged)")
     ap.add_argument("--draft", default=None, metavar="PREFIX:N",
                     help="draft model for --speculative: 'prefix:N' = "
                          "first N target layers (default: half the stack)")
@@ -189,9 +192,6 @@ examples:
     if args.speculative:
         if args.schedule != "continuous":
             ap.error("--speculative needs --schedule continuous")
-        if args.paged is not None:
-            ap.error("--speculative is incompatible with --paged "
-                     "(dense state only)")
         if args.speculative != args.steps_per_dispatch:
             ap.error("--speculative must equal --steps-per-dispatch "
                      "(the draft proposes exactly one micro-run)")
@@ -284,6 +284,9 @@ examples:
               f"hits, {p['skipped_prefill_tokens']} prompt tokens "
               f"skipped (rate {p['prefill_skip_rate']:.3f}), "
               f"{p['evictions']} evictions")
+        if args.speculative:
+            print(f"draft leases: {p['draft_pages_committed']} pages "
+                  f"committed, {p['draft_pages_rolled_back']} rolled back")
     c = stats["cache"]
     first = f"{t_first:.2f}s" if t_first is not None else "n/a"
     print(f"{batcher.cfg.name}: first token {first}; cache entries="

@@ -329,7 +329,7 @@ def make_masked_decode_step(cfg: ArchConfig, batch: int, max_len: int,
     local-position validity mask. See ``docs/memory_model.md``.
 
     With ``spec=(spec_k, draft_layers)`` the micro-run becomes a fused
-    speculative dispatch (dense state only; ``spec_k`` must equal k):
+    speculative dispatch (``spec_k`` must equal k):
     the first ``draft_layers`` blocks of the target act as a
     self-speculative DRAFT (shared embed/ln_f/head, stacked-layer
     parameter slice — a second compiled program from the same plan
@@ -349,6 +349,15 @@ def make_masked_decode_step(cfg: ArchConfig, batch: int, max_len: int,
     The draft state leaves ride in the same pytree under ``draft_``
     keys, so pool acquire/release, per-slot wipes, and donation are
     unchanged.
+
+    ``spec`` and ``paged`` compose: the draft's ``draft_``-prefixed KV
+    twins are paged into their own pool with the SAME page axes, and
+    both the draft scan and the target's block verify index through the
+    slot's single page table at the same local coordinates — one page id
+    addresses matching rows of both pools. The host backs the drafted
+    span with revocable draft pages (``PageAllocator.draft_lease``) and
+    commits or rolls them back at the boundary, so the start-cursor
+    rollback works unchanged over page runs.
 
     Inputs:  (params, state, feed [k,B] i32, prev [B] i32, pos [] i32,
               start [k,B] i32, active [k,B] bool, fresh [k,B] bool
@@ -376,10 +385,6 @@ def make_masked_decode_step(cfg: ArchConfig, batch: int, max_len: int,
     sspecs = model.decode_state_specs(batch, max_len)
     if spec is not None:
         spec_k, draft_layers = spec
-        if paged is not None:
-            raise ValueError(
-                "speculative decode composes with dense state only "
-                "(paged spec lanes are a follow-on)")
         if spec_k != k:
             raise ValueError(
                 f"spec_k ({spec_k}) must equal steps_per_dispatch ({k}): "
@@ -404,7 +409,8 @@ def make_masked_decode_step(cfg: ArchConfig, batch: int, max_len: int,
 
     batch_axes = state_batch_axes(sspecs)
 
-    def spec_run(params, state, feed, prev, pos, start, active, fresh):
+    def spec_run(params, state, feed, prev, pos, start, active, fresh,
+                 table=None):
         state = wipe_state_slots(state, fresh[0], batch_axes)
         tstate, dstate = split_spec_state(state)
         dparams = draft_prefix_params(params, draft_layers)
@@ -414,8 +420,10 @@ def make_masked_decode_step(cfg: ArchConfig, batch: int, max_len: int,
             st, pv = carry
             i, feed_i = xs
             tok_in = jnp.where(feed_i >= 0, feed_i, pv).astype(jnp.int32)
+            pages = (PageView(table, local0 + i, page_size)
+                     if paged is not None else None)
             logits, st = model.decode_block(dparams, st, tok_in[:, None],
-                                            local0 + i)
+                                            local0 + i, pages=pages)
             d = jnp.argmax(logits[:, 0], -1).astype(jnp.int32)
             return (st, d), (tok_in, d)
 
@@ -426,7 +434,9 @@ def make_masked_decode_step(cfg: ArchConfig, batch: int, max_len: int,
         # the draft scan actually consumed (feed steps included, so both
         # caches hold identical token prefixes)
         logits, tstate = model.decode_block(
-            params, tstate, jnp.swapaxes(tok_ins, 0, 1), local0)
+            params, tstate, jnp.swapaxes(tok_ins, 0, 1), local0,
+            pages=(PageView(table, local0, page_size)
+                   if paged is not None else None))
         verify = jnp.swapaxes(
             jnp.argmax(logits, -1).astype(jnp.int32), 0, 1)      # [k, B]
         zero = jnp.zeros((), jnp.int32)

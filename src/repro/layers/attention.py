@@ -363,3 +363,63 @@ def block_decode_self_attention(
     o = mha(q, cache_k, cache_v, causal=False, kv_valid=kv_valid)
     out = linear(params["wo"], o.reshape(B, m, n_heads * head_dim))
     return out, cache_k, cache_v
+
+
+def paged_block_decode_self_attention(
+    params: dict,
+    x: jnp.ndarray,              # [B, m, d] block of token hiddens
+    cache_k: jnp.ndarray,        # [P, ps, KV, hd] this layer's page pool
+    cache_v: jnp.ndarray,
+    pages,                       # models.base.PageView; local_pos = x[:,0]'s
+    *,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    rope_theta: float = 10000.0,
+):
+    """Block decode of ``m`` consecutive tokens against the page pool.
+
+    The paged twin of :func:`block_decode_self_attention`: slot ``b``'s
+    token ``j`` lives at local position ``local_pos[b] + j`` of its OWN
+    page run — RoPE rotates by the UNCLAMPED local position and the
+    per-query validity mask admits local rows ``<= local_pos[b] + j``,
+    exactly as the dense block path does, so the two produce the same
+    floats. Clamping is applied to INDEXING only, and only on the gather
+    side: the dense path's out-of-range writes are dropped by the
+    scatter's OOB semantics, so here an out-of-range local is routed to
+    page id ``P`` (one past the pool) and dropped the same way — a clamp
+    would instead alias it onto a real row and corrupt it.
+
+    Speculative rewind works like the dense block path, per page run:
+    rejected draft rows sit at-or-above the rewound cursor, where the
+    next micro-run's write front (into fresh draft pages, or back into
+    the kept partial page) overwrites them before any mask admits them.
+
+    Returns (out [B,m,d], new_pool_k, new_pool_v).
+    """
+    B, m, _ = x.shape
+    ps = pages.page_size
+    n_pages = pages.table.shape[1]
+    S = n_pages * ps
+    q = linear(params["wq"], x).reshape(B, m, n_heads, head_dim)
+    k = linear(params["wk"], x).reshape(B, m, n_kv, head_dim)
+    v = linear(params["wv"], x).reshape(B, m, n_kv, head_dim)
+    posb = (pages.local_pos.astype(jnp.int32)[:, None]
+            + jnp.arange(m, dtype=jnp.int32))
+    inv_freq = rope_freqs(head_dim, rope_theta)
+    q = apply_rope(q, posb, inv_freq)
+    k = apply_rope(k, posb, inv_freq)
+    in_range = (posb >= 0) & (posb < S)
+    posc = jnp.where(in_range, posb, 0)
+    page_ids = jnp.take_along_axis(pages.table, posc // ps, axis=1)
+    page_ids = jnp.where(in_range, page_ids, cache_k.shape[0])
+    offs = posc % ps
+    cache_k = cache_k.at[page_ids, offs].set(k)
+    cache_v = cache_v.at[page_ids, offs].set(v)
+    k_all = cache_k[pages.table].reshape(B, S, n_kv, head_dim)
+    v_all = cache_v[pages.table].reshape(B, S, n_kv, head_dim)
+    # query j of slot b sees exactly local rows [0, local_pos[b] + j]
+    kv_valid = jnp.arange(S)[None, None, :] <= posb[:, :, None]
+    o = mha(q, k_all, v_all, causal=False, kv_valid=kv_valid)
+    out = linear(params["wo"], o.reshape(B, m, n_heads * head_dim))
+    return out, cache_k, cache_v

@@ -193,6 +193,17 @@ class PageView(NamedTuple):
 PAGED_STATE_KEYS = ("cache_k", "cache_v")
 
 
+def is_paged_state_key(name: str) -> bool:
+    """True for leaves that live in the shared page pool: the
+    self-attention KV caches and their ``draft_``-prefixed speculative
+    twins (the draft's KV rides the SAME page tables — one page id
+    indexes both pools at matching local positions)."""
+    if name in PAGED_STATE_KEYS:
+        return True
+    return (name.startswith("draft_")
+            and name[len("draft_"):] in PAGED_STATE_KEYS)
+
+
 def paged_state_specs(sspecs, page_count: int, page_size: int):
     """Rewrite self-attention KV leaves to the shared-pool layout.
 
@@ -200,12 +211,14 @@ def paged_state_specs(sspecs, page_count: int, page_size: int):
     "batch", "seq", ...``) becomes ``[..., page_count, page_size, kv,
     hd]`` with both new axes replicated (logical ``None``): pages are
     shared between slots and buckets, so neither maps onto a mesh data
-    axis. Head/hd sharding is preserved. All other leaves — cross
-    caches, SSM/conv/RWKV state — pass through unchanged.
+    axis. Head/hd sharding is preserved. ``draft_``-prefixed KV twins
+    (speculative lanes) are rewritten the same way — they share the
+    slot's page table, so their pool has the same page axes. All other
+    leaves — cross caches, SSM/conv/RWKV state — pass through unchanged.
     """
     out = {}
     for name, s in sspecs.items():
-        if name not in PAGED_STATE_KEYS:
+        if not is_paged_state_key(name):
             out[name] = s
             continue
         b = s.logical.index("batch")

@@ -13,6 +13,7 @@ from repro.layers.attention import (
     block_decode_self_attention,
     cross_attention,
     decode_self_attention,
+    paged_block_decode_self_attention,
     paged_decode_self_attention,
     self_attention,
 )
@@ -97,7 +98,16 @@ def attn_block_decode(
     local: Optional[jnp.ndarray] = None,   # [B] int32: local block coords
 ):
     h = rmsnorm(params["ln1"], x)
-    if local is not None:
+    if local is not None and pages is not None:
+        # paged local-coordinate block decode (speculative lanes over the
+        # page pool): the PageView's local_pos is the block origin, so
+        # ``local`` only selects this branch
+        h, ck, cv = paged_block_decode_self_attention(
+            params["attn"], h, cache_k, cache_v, pages,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.head_dim,
+            rope_theta=cfg.rope_theta,
+        )
+    elif local is not None:
         # dense local-coordinate block decode (speculative lanes): ``pos``
         # and ``window_start`` are unused — each slot indexes, rotates,
         # and masks at its own local positions [local[b], local[b]+m)

@@ -119,14 +119,17 @@ class DecoderLM:
         return logits, {"cache_k": ck, "cache_v": cv}
 
     def decode_block(self, params, state: Dict, tokens: jnp.ndarray,
-                     local: jnp.ndarray):
+                     local: jnp.ndarray, *, pages=None):
         """Score a block of m consecutive tokens per sequence in one pass.
 
         tokens [B, m] int32; ``local`` [B] int32 is each slot's LOCAL
         position for ``tokens[:, 0]`` (see
         ``block_decode_self_attention`` for the coordinate contract —
         RoPE, cache writes, and the per-query validity mask all use
-        ``local[b] + j``). Returns (logits [B, m, V], state):
+        ``local[b] + j``). With ``pages`` (a ``models.base.PageView``
+        whose ``local_pos`` equals ``local``) the KV leaves are the
+        shared page pool and the writes land in the slot's page run.
+        Returns (logits [B, m, V], state):
         ``logits[b, j]`` is the next-token distribution after consuming
         ``tokens[b, :j+1]``, exactly what ``m`` sequential
         ``decode_step`` calls would produce up to float re-association.
@@ -139,7 +142,7 @@ class DecoderLM:
         def body(x, inp):
             layer_params, ck, cv = inp
             x, ck, cv = attn_block_decode(layer_params, x, ck, cv, None,
-                                          cfg, local=local)
+                                          cfg, local=local, pages=pages)
             return x, (ck, cv)
 
         x, (ck, cv) = jax.lax.scan(

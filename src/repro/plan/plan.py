@@ -148,8 +148,10 @@ class ExecutionPlan:
         shares them across buckets), ``"dense"`` just the per-slot
         remainder. With ``spec=(spec_k, draft_layers)`` the tree also
         carries the ``draft_``-prefixed layer-prefix KV leaves the fused
-        speculative executable scans (dense only; the pool and per-slot
-        wipes treat them like any other batch-laned leaf).
+        speculative executable scans (the pool and per-slot wipes treat
+        them like any other batch-laned leaf; combined with ``paged``
+        the draft KV twins move to the pooled layout too — they ride the
+        slot's page table).
         """
         sspecs = self.model.decode_state_specs(batch, max_len)
         if spec is not None:
@@ -157,15 +159,15 @@ class ExecutionPlan:
 
             sspecs = dict(sspecs, **spec_state_specs(sspecs, spec[1]))
         if paged is not None:
-            from repro.models.base import PAGED_STATE_KEYS, paged_state_specs
+            from repro.models.base import is_paged_state_key, paged_state_specs
 
             sspecs = paged_state_specs(sspecs, *paged)
             if only == "pool":
                 sspecs = {k: s for k, s in sspecs.items()
-                          if k in PAGED_STATE_KEYS}
+                          if is_paged_state_key(k)}
             elif only == "dense":
                 sspecs = {k: s for k, s in sspecs.items()
-                          if k not in PAGED_STATE_KEYS}
+                          if not is_paged_state_key(k)}
         return jax.device_put(
             init_params(jax.random.PRNGKey(0), sspecs),
             specs_to_shardings(sspecs, self.mesh, self.rules))
@@ -254,12 +256,14 @@ class ExecutionPlan:
         ``paged=(page_count, page_size)`` (masked_decode only) swaps the
         dense per-slot KV slabs for the pooled paged layout plus a
         per-slot page-table input; requires ``max_len % page_size == 0``.
-        ``spec=(spec_k, draft_layers)`` (masked_decode only, dense only)
-        builds the fused speculative variant: a layer-prefix draft scans
-        the micro-run and the full target block-verifies it in the same
+        ``spec=(spec_k, draft_layers)`` (masked_decode only) builds the
+        fused speculative variant: a layer-prefix draft scans the
+        micro-run and the full target block-verifies it in the same
         dispatch (see ``make_masked_decode_step``); the draft signature
         joins the cache key so plans differing only in draft depth never
-        share an executable.
+        share an executable. ``spec`` composes with ``paged`` — the key
+        carries both fields, so the four layout/schedule combinations
+        never collide.
         """
         if steps_per_dispatch < 1:
             raise ValueError(
@@ -285,10 +289,6 @@ class ExecutionPlan:
                 raise ValueError(
                     "speculative decode only applies to masked_decode "
                     f"executables, not {kind!r}")
-            if paged is not None:
-                raise ValueError(
-                    "speculative decode composes with dense state only "
-                    "(paged spec lanes are a follow-on)")
             spec_k, draft_layers = spec
             if spec_k != steps_per_dispatch:
                 raise ValueError(

@@ -34,6 +34,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import math
 import time
 from typing import Deque, Dict, List, Optional, Sequence, Union
 
@@ -50,6 +51,24 @@ _MIN_PREFILL = 8
 
 def _pow2ceil(n: int) -> int:
     return 1 << max(n - 1, 0).bit_length() if n > 1 else 1
+
+
+def quantile(vals: Sequence[float], p: float) -> float:
+    """Nearest-rank quantile of an (unsorted) sample; 0.0 when empty.
+
+    The index is ``ceil(p * n) - 1`` clamped to ``[0, n - 1]`` — the
+    classic nearest-rank definition. The previous ad-hoc ``int(p * n)``
+    overshot on small samples (p50 of two values picked the LARGER one;
+    p50 of [a, b, c] picked b only by accident of truncation), which is
+    exactly where the serve smoke runs live. Every percentile the serve
+    stack reports (bucket latencies, async TTFT, benchmark ticks) goes
+    through here so the definitions cannot drift again.
+    """
+    if not vals:
+        return 0.0
+    v = sorted(vals)
+    n = len(v)
+    return v[max(0, min(n - 1, math.ceil(p * n) - 1))]
 
 
 @dataclasses.dataclass
@@ -188,13 +207,9 @@ class BucketMetrics:
     prefix_hits: int = 0
 
     def summary(self) -> Dict[str, float]:
-        lat = sorted(self.latencies)
-        idle = sorted(self.slot_idle)
-
-        def pct(vals, p):
-            return vals[min(len(vals) - 1, int(p * len(vals)))] \
-                if vals else 0.0
-
+        lat = list(self.latencies)
+        idle = list(self.slot_idle)
+        pct = quantile
         busy = self.prefill_seconds + self.decode_seconds
         return {
             "dispatches": self.dispatches,
@@ -301,43 +316,21 @@ class ServeBatcher:
         # speculative decode: ``speculative`` = spec_k (draft tokens per
         # micro-run, must equal steps_per_dispatch), ``draft`` names the
         # draft model — "prefix:N" runs the first N layers of the target
-        # as a self-speculative draft (default: half the stack)
-        spec = None
-        if draft is not None and not speculative:
-            raise ValueError(
-                "draft only applies with speculative decode "
-                "(speculative > 0)")
-        if speculative:
-            if schedule != "continuous":
-                raise ValueError(
-                    "speculative decode needs schedule='continuous' — only "
-                    "the masked-decode micro-run has a draft feed lane")
-            if paged is not None:
-                raise ValueError(
-                    "speculative decode composes with dense state only "
-                    "(paged spec lanes are a follow-on)")
-            if speculative != steps_per_dispatch:
-                raise ValueError(
-                    f"speculative ({speculative}) must equal "
-                    f"steps_per_dispatch ({steps_per_dispatch}): the draft "
-                    "proposes exactly one micro-run per dispatch")
-            n_layers = self.plan.cfg.n_layers
-            draft_layers = max(1, n_layers // 2)
-            if draft is not None:
-                dkind, _, depth = draft.partition(":")
-                if dkind != "prefix" or not depth.isdigit():
-                    raise ValueError(f"draft must be 'prefix:N', got "
-                                     f"{draft!r}")
-                draft_layers = int(depth)
-            if not 1 <= draft_layers <= n_layers:
-                raise ValueError(
-                    f"draft depth must be in [1, {n_layers}], got "
-                    f"{draft_layers}")
-            if not hasattr(self.plan.model, "decode_block"):
-                raise ValueError(
-                    f"family {self.plan.cfg.family!r} has no block-verify "
-                    "decode path (decode_block); speculative lanes need one")
-            spec = (speculative, draft_layers)
+        # as a self-speculative draft (default: half the stack). All
+        # spec/paged constraints live in repro.serve.validation — the
+        # scheduler re-checks the resolved tuple through the same module
+        from repro.serve.validation import (
+            resolve_speculative,
+            validate_paged_spec,
+        )
+
+        spec = resolve_speculative(
+            speculative, draft, schedule=schedule,
+            steps_per_dispatch=steps_per_dispatch,
+            n_layers=self.plan.cfg.n_layers, model=self.plan.model,
+            family=self.plan.cfg.family)
+        if spec is not None and paged is not None:
+            validate_paged_spec(spec, paged, self.policy.buckets)
         self.spec = spec
         self.pool = StatePool(self.plan, paged=paged, spec=spec)
         self.params = None

@@ -57,6 +57,10 @@ class SlotPages:
     ``pages[i]`` is the physical page holding local positions
     ``[i*page_size, (i+1)*page_size)``; the first ``shared`` entries are
     read-only prefix-cache hits, the rest are private to this slot.
+    ``draft`` continues the run past ``pages``: revocable pages absorbing
+    one micro-run's speculative writes, resolved at the boundary by
+    :meth:`PageAllocator.resolve_draft` (committed pages splice into
+    ``pages``, the rest roll back to the free list).
     """
 
     pages: List[int]
@@ -64,6 +68,8 @@ class SlotPages:
     prompt: Tuple[int, ...]
     published: int               # prompt pages already in the prefix cache
     shared_len: int = 0          # prefix tokens whose prefill is skipped
+    draft: List[int] = dataclasses.field(default_factory=list)
+    released: bool = False
 
 
 class PageAllocator:
@@ -94,6 +100,8 @@ class PageAllocator:
         self.skipped_tokens = 0
         self.prompt_tokens = 0
         self.evictions = 0
+        self.draft_pages_committed = 0
+        self.draft_pages_rolled_back = 0
 
     # -- accounting ---------------------------------------------------------
 
@@ -157,7 +165,14 @@ class PageAllocator:
             hit += 1
         return hit * ps
 
-    def can_admit(self, prompt: Sequence[int], need: int) -> bool:
+    def spec_demand(self, k: int) -> int:
+        """Worst-case transient draft pages one speculative lane holds
+        mid-micro-run: the ``k`` draft/verify positions can straddle a
+        page boundary, so one extra page on top of the span."""
+        return -(-k // self.page_size) + 1
+
+    def can_admit(self, prompt: Sequence[int], need: int, *,
+                  reserve: int = 0, lazy: bool = False) -> bool:
         ps = self.page_size
         cap = (len(prompt) - 1) // ps
         shared: List[int] = []
@@ -165,17 +180,24 @@ class PageAllocator:
             if h not in self._prefix:
                 break
             shared.append(self._prefix[h])
-        n_pages = -(-need // ps)
+        span = min(need, len(prompt)) if lazy else need
+        n_pages = -(-span // ps)
         private = n_pages - len(shared)
         # the shared hits get pinned at admit, so they must not count
         # toward the evictable budget even when only the cache holds them
         shared_set = set(shared)
         evictable = sum(1 for p in self._prefix.values()
                         if self._refs[p] == 1 and p not in shared_set)
-        return private <= len(self._free) + evictable
+        return private + reserve <= len(self._free) + evictable
 
-    def admit(self, prompt: Sequence[int], need: int) -> Optional[SlotPages]:
+    def admit(self, prompt: Sequence[int], need: int, *,
+              lazy: bool = False) -> Optional[SlotPages]:
         """Lease pages covering local positions ``[0, need)``.
+
+        With ``lazy=True`` (speculative mode) only the prompt span is
+        leased up front; the run grows at each dispatch through
+        :meth:`draft_lease` / :meth:`resolve_draft`, so rejected drafts
+        never hold pages past the micro-run boundary.
 
         Returns None if the pool cannot cover the private span even
         after evicting unpinned prefix pages (caller skips admission).
@@ -191,9 +213,10 @@ class PageAllocator:
         for h, p in zip(hashes, shared):
             self._incref(p)                     # pin before any eviction
             self._prefix.move_to_end(h)         # LRU touch
-        n_pages = -(-need // ps)
+        span = min(need, len(prompt)) if lazy else need
+        n_pages = -(-span // ps)
         private_needed = n_pages - len(shared)  # always >= 1: sharing is
-        # capped at the last FULL prompt page, and need > len(prompt) - 1
+        # capped at the last FULL prompt page, and span > len(prompt) - 1
         while private_needed > len(self._free):
             if not self._evict_one():
                 for p in shared:                # roll back the pins
@@ -220,11 +243,14 @@ class PageAllocator:
         outlives the slot); pages whose content hash is already cached
         stay private. Returns the number of pages newly published.
         """
+        if lease.released:
+            return 0
         ps = self.page_size
         hashes = prefix_page_hashes(lease.prompt, ps)
         done = 0
         while (lease.published < len(hashes)
-               and (lease.published + 1) * ps <= fed):
+               and (lease.published + 1) * ps <= fed
+               and lease.published < len(lease.pages)):
             i = lease.published
             h = hashes[i]
             if h not in self._prefix:
@@ -234,14 +260,66 @@ class PageAllocator:
             lease.published += 1
         return done
 
+    # -- draft leases (speculative lanes) ------------------------------------
+
+    def draft_lease(self, lease: SlotPages, hi: int) -> bool:
+        """Extend the lease's page run with revocable draft pages so that
+        local positions ``[0, hi)`` are all mapped for one micro-run's
+        draft + verify writes. Returns False — lease untouched — when the
+        pool cannot cover the span even after LRU eviction; the caller
+        must then park the slot instead of dispatching it."""
+        if lease.released:
+            raise ValueError("draft_lease on a released lease")
+        ps = self.page_size
+        grow = -(-hi // ps) - (len(lease.pages) + len(lease.draft))
+        if grow <= 0:
+            return True
+        while grow > len(self._free):
+            if not self._evict_one():
+                return False
+        for _ in range(grow):
+            lease.draft.append(self._take())
+        return True
+
+    def resolve_draft(self, lease: SlotPages, committed_local: int) -> None:
+        """Boundary resolution of a draft lease: every draft page holding
+        at least one committed local position (``< committed_local``)
+        splices into the committed run and follows the normal
+        publish/refcount lifecycle; rejected pages roll back to the free
+        list. The scheduler's ``slot.start`` bump already rewinds the
+        local clock, so a later micro-run re-covers the freed span with
+        fresh draft pages."""
+        if lease.released or not lease.draft:
+            lease.draft = []
+            return
+        ps = self.page_size
+        keep: List[int] = []
+        for j, p in enumerate(lease.draft, start=len(lease.pages)):
+            if j * ps < committed_local:
+                keep.append(p)
+            else:
+                self._decref(p)
+                self.draft_pages_rolled_back += 1
+        lease.pages.extend(keep)
+        self.draft_pages_committed += len(keep)
+        lease.draft = []
+
     def release(self, lease: SlotPages) -> None:
         """Drop the slot's reference on every leased page (boundary-time
         reclaim on finish/cancel/shed). Published pages survive at
         refcount >= 1 under the prefix cache; purely private pages go
-        straight back to the free list."""
+        straight back to the free list. Idempotent: a finish and a
+        boundary cancel/shed landing on the same lease must not
+        double-decref."""
+        if lease.released:
+            return
+        lease.released = True
         for p in lease.pages:
             self._decref(p)
+        for p in lease.draft:
+            self._decref(p)
         lease.pages = []
+        lease.draft = []
 
     # -- stats ----------------------------------------------------------------
 
@@ -260,4 +338,6 @@ class PageAllocator:
             "skipped_prefill_tokens": self.skipped_tokens,
             "prefill_skip_rate": self.skipped_tokens / total,
             "evictions": self.evictions,
+            "draft_pages_committed": self.draft_pages_committed,
+            "draft_pages_rolled_back": self.draft_pages_rolled_back,
         }

@@ -63,9 +63,9 @@ Boundary seams (all host-side, none touch the compiled step):
   deterministic global step counter; the async server installs
   ``time.monotonic`` so deadlines are wall-clock.
 
-Speculative mode (``spec=(spec_k, draft_layers)``, dense state only):
-each micro-run dispatches the FUSED draft-scan + block-verify executable
-(see ``make_masked_decode_step``) instead of the plain k-step scan. At
+Speculative mode (``spec=(spec_k, draft_layers)``): each micro-run
+dispatches the FUSED draft-scan + block-verify executable (see
+``make_masked_decode_step``) instead of the plain k-step scan. At
 the boundary the host fetches the draft and verify token lanes, accepts
 each lane's longest draft prefix the target agrees with, commits those
 tokens (``_Slot.acc`` — results and streaming deltas publish only
@@ -76,6 +76,19 @@ consume extra bucket positions; when a request runs out, it requeues as
 a *continuation* whose prompt carries everything committed so far (the
 carry map merges legs into one result), preserving the plain-mode
 invariant that a dispatch always terminates.
+
+Speculative x paged composes through revocable **draft leases** (see
+``PageAllocator.draft_lease`` and docs/memory_model.md): admission
+leases only the prompt span (``lazy=True``), each micro-run extends the
+lease's page run with draft pages covering the speculative write front
+``[local0, local0 + live)``, and the boundary accept decision resolves
+them — pages fully below the committed cursor splice into the run, the
+rest roll back to the free list alongside the ``start`` bump that
+replays their positions. Draft-lease demand is reserved at admission
+(``can_admit(reserve=...)``) so speculation can never admit itself into
+a pool too full to extend any lane's lease; if eviction pressure still
+starves a lane mid-dispatch, the lane parks — it requeues as a
+continuation, releasing its lease so the other lanes progress.
 """
 
 from __future__ import annotations
@@ -178,15 +191,14 @@ class ContinuousScheduler:
                         "position space")
         spec = tuple(spec) if spec else None
         if spec is not None:
+            from repro.serve.validation import (
+                validate_paged_spec,
+                validate_spec_geometry,
+            )
+
+            validate_spec_geometry(spec, steps_per_dispatch)
             if paged is not None:
-                raise ValueError(
-                    "speculative decode composes with dense state only "
-                    "(paged spec lanes are a follow-on)")
-            if spec[0] != steps_per_dispatch:
-                raise ValueError(
-                    f"spec_k ({spec[0]}) must equal steps_per_dispatch "
-                    f"({steps_per_dispatch}): the draft proposes exactly "
-                    "one micro-run per dispatch")
+                validate_paged_spec(spec, paged, policy.buckets)
         self.spec = spec
         self.plan = plan
         self.policy = policy
@@ -303,6 +315,7 @@ class ContinuousScheduler:
                 self.on_shed(req.request_id)
 
         alloc = getattr(self.pool, "allocator", None)
+        lazy = self.spec is not None
 
         def fits(req: DecodeRequest) -> bool:
             need = len(req.prompt) + req.max_new_tokens - 1
@@ -312,10 +325,20 @@ class ContinuousScheduler:
                 return pos + need <= bucket.max_len
             # prefix-cache hits shrink the positions the request consumes
             # (its start is backdated by the shared span); admission also
-            # requires the page budget to cover the private pages
+            # requires the page budget to cover the private pages.
+            # Speculative lanes lease lazily (prompt span only) but must
+            # reserve draft-lease headroom for every live lane plus this
+            # one, so speculation can never admit itself into a pool too
+            # full to extend any lane's write front
+            reserve = 0
+            if lazy:
+                occupied = 1 + sum(1 for s in slots if s is not None)
+                reserve = alloc.spec_demand(self.steps_per_dispatch) \
+                    * occupied
             shared = alloc.probe(req.prompt)
             return pos + (need - shared) <= bucket.max_len and \
-                alloc.can_admit(req.prompt, need)
+                alloc.can_admit(req.prompt, need, reserve=reserve,
+                                lazy=lazy)
 
         admitted: List[int] = []
         for b in range(bucket.batch):
@@ -326,14 +349,15 @@ class ContinuousScheduler:
                 break
             if alloc is not None:
                 need = len(chosen.prompt) + chosen.max_new_tokens - 1
-                lease = alloc.admit(chosen.prompt, need)
+                lease = alloc.admit(chosen.prompt, need, lazy=lazy)
                 if lease is None:
                     # the page budget moved between fits and admit
                     # (eviction edge): requeue at the head, stop filling
                     pending.appendleft(chosen)
                     break
                 slots[b] = _Slot(chosen, start=pos - lease.shared_len,
-                                 fed=lease.shared_len, pages=lease)
+                                 fed=lease.shared_len, pages=lease,
+                                 acc=[] if self.spec is not None else None)
             else:
                 slots[b] = _Slot(chosen, start=pos,
                                  acc=[] if self.spec is not None else None)
@@ -375,6 +399,42 @@ class ContinuousScheduler:
             self._stale_cancels.clear()
             results.update(res)
         return results
+
+    def _park(self, slots, b, pos, freed_at, done, requeues):
+        """Requeue lane ``b``'s request as a continuation at ``pos``.
+
+        Two callers: the end-of-dispatch drain (rollbacks pushed
+        ``end_step`` past the bucket's positions) and the mid-dispatch
+        draft-lease valve (the page pool could not cover the lane's
+        speculative write front). The continuation's prompt carries
+        everything committed so far; the page lease — if any — is
+        published then released, so the prompt pages enter the prefix
+        cache (the continuation's re-admission skips them) and the freed
+        pages let the other lanes progress. If no bucket can hold the
+        continuation, the committed prefix is delivered as a (counted)
+        partial result instead.
+        """
+        slot = slots[b]
+        rid = slot.req.request_id
+        alloc = getattr(self.pool, "allocator", None)
+        if alloc is not None and slot.pages is not None:
+            alloc.publish(slot.pages, slot.fed)
+            alloc.release(slot.pages)
+        carry = self._spec_carry.pop(rid, []) + slot.acc
+        cont = dataclasses.replace(
+            slot.req,
+            prompt=list(slot.req.prompt) + slot.acc,
+            max_new_tokens=slot.req.max_new_tokens - len(slot.acc))
+        if cont.need_len > max(bk.max_len for bk in self.policy.buckets):
+            self.spec_partial_results += 1
+            done.append((slot.req, b, slot.start, carry))
+        else:
+            self._spec_carry[rid] = carry
+            requeues.append(cont)
+            self.spec_continuations += 1
+            self.events.append(SlotEvent("requeue", pos, b, rid))
+        freed_at[b] = pos - 1
+        slots[b] = None
 
     def _free(self, slots, b, pos, freed_at, done=None):
         """Release lane ``b`` at boundary ``pos`` (finish or cancel)."""
@@ -505,6 +565,32 @@ class ContinuousScheduler:
             for b in self._admit(pending, bucket, slots, pos, freed_at):
                 fresh[0, b] = True
                 ever_used[b] = True
+            if self.spec is not None and alloc is not None:
+                # extend every live lane's lease with revocable draft
+                # pages covering this micro-run's write front BEFORE the
+                # page table is built; a lane the pool cannot cover parks
+                # (requeued as a continuation, lease released) so the
+                # remaining lanes keep making progress — the deadlock
+                # valve for eviction-pressure corner cases the admission
+                # reserve does not see
+                parked: List[DecodeRequest] = []
+                for b, slot in enumerate(slots):
+                    if slot is None:
+                        continue
+                    live = min(k, slot.end_step - pos + 1)
+                    if alloc.draft_lease(slot.pages,
+                                         pos - slot.start + live):
+                        continue
+                    if sum(1 for s in slots if s is not None) == 1:
+                        raise RuntimeError(
+                            "page pool cannot extend the sole speculative "
+                            "lane's draft lease: page_count is too small "
+                            "for spec mode (validate_paged_spec should "
+                            "have rejected this geometry)")
+                    self._park(slots, b, pos, freed_at, done, parked)
+                    fresh[0, b] = False
+                for cont in reversed(parked):
+                    pending.appendleft(cont)
             if all(s is None for s in slots):
                 break                  # drained, or out of positions
 
@@ -548,7 +634,11 @@ class ContinuousScheduler:
                 for b, slot in enumerate(slots):
                     table[b, :] = scratch[b]
                     if slot is not None and slot.pages is not None:
-                        pg = slot.pages.pages
+                        # speculative mode appends the revocable draft
+                        # pages after the committed run, so the table
+                        # covers the lane's whole write front this
+                        # micro-run; ``draft`` is empty otherwise
+                        pg = slot.pages.pages + slot.pages.draft
                         table[b, :len(pg)] = pg
                 extra = (lane("table", table, table_sh),)
             if self.spec is not None:
@@ -563,7 +653,8 @@ class ContinuousScheduler:
                     jax.device_put(np.int32(pos), pos_sh),
                     lane("start", start),
                     lane("active", active),
-                    lane("fresh", fresh))
+                    lane("fresh", fresh),
+                    *extra)
                 vt = np.asarray(jax.device_get(verify))
                 dt = np.asarray(jax.device_get(drafts))
                 deltas: Dict[str, List[int]] = {}
@@ -595,6 +686,14 @@ class ContinuousScheduler:
                     prev_host[b] = slot.prev_tok
                     if n < live:
                         self.spec_rollbacks += 1
+                    if alloc is not None and slot.pages is not None:
+                        # resolve the lane's draft pages against the
+                        # committed cursor IN THE CURRENT local frame —
+                        # before the start bump below moves the origin:
+                        # pages fully below ``local0 + n`` splice into
+                        # the committed run, the rest roll back
+                        alloc.resolve_draft(slot.pages,
+                                            pos - slot.start + n)
                     # the universal bump k - n advances the slot's local
                     # cursor by exactly n: rejected steps replay next
                     # micro-run, and a fully-accepted short lane (live <
@@ -651,29 +750,11 @@ class ContinuousScheduler:
         # end_step past the bucket's positions: those requeue as
         # continuations whose prompt carries everything committed so far
         requeues: List[DecodeRequest] = []
-        max_bucket_len = max(bk.max_len for bk in self.policy.buckets)
         for b, slot in enumerate(slots):
             if slot is None:
                 continue
             if self.spec is not None and slot.end_step >= pos:
-                rid = slot.req.request_id
-                carry = self._spec_carry.pop(rid, []) + slot.acc
-                cont = dataclasses.replace(
-                    slot.req,
-                    prompt=list(slot.req.prompt) + slot.acc,
-                    max_new_tokens=slot.req.max_new_tokens - len(slot.acc))
-                if cont.need_len > max_bucket_len:
-                    # no bucket can hold the continuation: deliver the
-                    # committed prefix as a (counted) partial result
-                    self.spec_partial_results += 1
-                    done.append((slot.req, b, slot.start, carry))
-                else:
-                    self._spec_carry[rid] = carry
-                    requeues.append(cont)
-                    self.spec_continuations += 1
-                    self.events.append(SlotEvent("requeue", pos, b, rid))
-                freed_at[b] = pos - 1
-                slots[b] = None
+                self._park(slots, b, pos, freed_at, done, requeues)
             else:
                 self._free(slots, b, pos, freed_at, done)
         for cont in reversed(requeues):

@@ -53,7 +53,12 @@ import threading
 import time
 from typing import AsyncIterator, Deque, Dict, List, Optional
 
-from repro.serve.batcher import DecodeRequest, RequestResult, ServeBatcher
+from repro.serve.batcher import (
+    DecodeRequest,
+    RequestResult,
+    ServeBatcher,
+    quantile,
+)
 
 _TTFT_WINDOW = 4096      # bounded: a resident server must not grow per-req
 
@@ -294,9 +299,10 @@ class AsyncServeServer:
 
     def stats(self) -> Dict[str, object]:
         def pct(vals, p):
-            v = sorted(vals)
-            return round(v[min(len(v) - 1, int(p * len(v)))], 4) \
-                if v else 0.0
+            # nearest-rank with small-sample clamping — the shared serve
+            # definition (the old int(p * n) index overshot: p50 TTFT of
+            # a two-request smoke run reported the SLOWER request)
+            return round(quantile(vals, p), 4)
 
         return {
             "open_streams": len(self._streams),

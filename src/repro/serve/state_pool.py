@@ -75,9 +75,6 @@ class StatePool:
         # speculative decode: (spec_k, draft_layers) — fresh states carry
         # the draft_-prefixed layer-prefix KV twins alongside the target's
         self.spec = tuple(spec) if spec else None
-        if self.spec is not None and self.paged is not None:
-            raise ValueError("speculative decode composes with dense "
-                             "state only")
         self.allocator = None
         if self.paged is not None:
             from repro.serve.paging import PageAllocator
@@ -99,7 +96,8 @@ class StatePool:
             return self.plan.fresh_decode_state(batch, max_len,
                                                 spec=self.spec)
         return self.plan.fresh_decode_state(batch, max_len,
-                                            paged=self.paged, only="dense")
+                                            paged=self.paged, only="dense",
+                                            spec=self.spec)
 
     def _checkout_pool(self, bucket: BucketShape):
         """The shared paged KV leaves, exclusively, for one dispatch."""
@@ -114,7 +112,8 @@ class StatePool:
         if leaves is None:
             batch, max_len = bucket
             leaves = self.plan.fresh_decode_state(
-                batch, max_len, paged=self.paged, only="pool")
+                batch, max_len, paged=self.paged, only="pool",
+                spec=self.spec)
         return leaves
 
     def _pool(self, bucket: BucketShape) -> _BucketPool:
@@ -210,15 +209,16 @@ class StatePool:
     def release(self, batch: int, max_len: int, state) -> None:
         bucket = (batch, max_len)
         if self.paged is not None:
-            from repro.models.base import PAGED_STATE_KEYS
+            from repro.models.base import is_paged_state_key
 
             # the executables donated the state through, so the pooled
-            # leaves inside it ARE the current page pool: check it back
-            # in for the next dispatch and free-list only the remainder
+            # leaves inside it ARE the current page pool (draft KV twins
+            # included in speculative mode): check it back in for the
+            # next dispatch and free-list only the remainder
             leaves = {k: v for k, v in state.items()
-                      if k in PAGED_STATE_KEYS}
+                      if is_paged_state_key(k)}
             state = {k: v for k, v in state.items()
-                     if k not in PAGED_STATE_KEYS}
+                     if not is_paged_state_key(k)}
             with self._lock:
                 self._pool_leaves = leaves
                 self._pool_out = False

@@ -187,6 +187,133 @@ class SpecHostPlan:
         return self.exes[key]
 
 
+class PagedSpecHostExe(SpecHostExe):
+    """SpecHostExe with the paged 9th input (the page table).
+
+    Receipts stay LOCAL — page indirection must be invisible to the
+    committed stream — but every active step's write position has to be
+    covered by the table the scheduler built (committed run + draft
+    lease), which is exactly the contract ``draft_lease`` exists for.
+    """
+
+    def __init__(self, mismatch=frozenset(), page_size=4):
+        super().__init__(mismatch)
+        self.bundle = types.SimpleNamespace(in_shardings=(None,) * 9)
+        self.page_size = page_size
+
+    def compiled(self, params, state, feed, prev, pos, start, active,
+                 fresh, table):
+        table = np.asarray(table)
+        act = np.asarray(active)
+        k, B = act.shape
+        assert table.shape[0] == B and table.dtype == np.int32
+        local = (int(pos) + np.arange(k, dtype=np.int32)[:, None]
+                 - np.asarray(start))
+        for i in range(k):
+            for b in range(B):
+                if act[i, b]:
+                    assert 0 <= local[i, b] // self.page_size \
+                        < table.shape[1], (i, b, local[i, b])
+        return super().compiled(params, state, feed, prev, pos, start,
+                                active, fresh)
+
+
+class PagedSpecHostPlan(SpecHostPlan):
+    """Plan stand-in for speculative x paged micro-runs."""
+
+    def serve_executable(self, kind, *, batch, max_len,
+                         steps_per_dispatch=1, spec=None, paged=None,
+                         **kw):
+        assert kind == "masked_decode"
+        assert spec is not None and paged is not None
+        key = (batch, max_len, steps_per_dispatch, spec, paged)
+        if key not in self.exes:
+            self.exes[key] = PagedSpecHostExe(self.mismatch, paged[1])
+        return self.exes[key]
+
+
+class PagedNullPool(NullPool):
+    """NullPool plus a REAL PageAllocator: the scheduler's paged branch
+    (lazy admission, draft leases, boundary resolution, publish/release,
+    page-table builds) runs against real host bookkeeping while the
+    device state stays fake."""
+
+    def __init__(self, page_count, page_size):
+        super().__init__()
+        from repro.serve.paging import PageAllocator
+
+        self.paged = (page_count, page_size)
+        self.allocator = PageAllocator(page_count, page_size)
+
+
+def check_page_invariants(alloc, slots) -> None:
+    """Boundary-time page conservation over the live slots' leases."""
+    assert alloc.pages_free + alloc.pages_in_use == alloc.page_count
+    cached = set(alloc._prefix.values())
+    writable = []
+    for s in slots:
+        if s is None or s.pages is None:
+            continue
+        for i, p in enumerate(s.pages.pages):
+            assert p in alloc._refs, p
+            if i >= s.pages.shared and i >= s.pages.published:
+                writable.append(p)
+        writable.extend(s.pages.draft)
+    # one writer per page, and shared (cached) pages never draft-writable
+    assert len(writable) == len(set(writable)), writable
+    assert cached.isdisjoint(writable)
+
+
+def run_paged_spec_host_trace(lengths, k, batch, max_len=64, page_size=4,
+                              page_count=None, mismatch=(),
+                              cancel_at=None, reqs=None):
+    """Drive the real scheduler in SPECULATIVE x PAGED mode over the
+    host fakes (real PageAllocator, fake executable/state).
+
+    Page invariants are checked at EVERY micro-run boundary through the
+    ``on_boundary`` hook, and page conservation is asserted after the
+    drain: whatever mix of accepts, rollbacks, continuation requeues,
+    and cancels the trace produced, only scratch and prefix-cache pages
+    may remain in use. Returns ``(sched, reqs, results, canceled)``.
+    """
+    policy = BucketPolicy([Bucket(max_len, batch)])
+    if page_count is None:
+        # enough to fully back every lane plus the spec draft headroom
+        page_count = (batch * (max_len // page_size) + batch
+                      + (-(-k // page_size) + 1))
+    pool = PagedNullPool(page_count, page_size)
+    sched = ContinuousScheduler(PagedSpecHostPlan(mismatch), policy,
+                                pool, steps_per_dispatch=k, spec=(k, 1))
+    if reqs is None:
+        reqs = [DecodeRequest(
+            f"s{i}", [1 + (i + j) % 7 for j in range(plen)],
+            max_new_tokens=n)
+            for i, (plen, n) in enumerate(lengths)]
+    canceled = []
+    cancel_state = {"rid": None}
+    if cancel_at is not None:
+        boundary, idx = cancel_at
+        cancel_state["rid"] = reqs[idx % len(reqs)].request_id
+        cancel_state["boundary"] = boundary
+
+    def hook(pos, slots):
+        rid = cancel_state["rid"]
+        if rid is not None and pos >= cancel_state["boundary"] and \
+                rid not in canceled and any(
+                    s is not None and s.req.request_id == rid
+                    for s in slots):
+            sched.cancel(rid)
+            canceled.append(rid)
+        check_page_invariants(pool.allocator, slots)
+
+    sched.on_boundary = hook
+    pending = collections.deque(reqs)
+    results = sched.run(pending, None, {})
+    alloc = pool.allocator
+    assert alloc.pages_in_use == len(alloc._scratch) + len(alloc._prefix)
+    return sched, reqs, results, canceled
+
+
 def spec_expected_receipt(plen, n):
     """Local receipts: token j of a prompt-P request is P + j."""
     return list(range(plen, plen + n))

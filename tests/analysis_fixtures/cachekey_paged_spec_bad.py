@@ -1,0 +1,48 @@
+"""Known-bad fixture for RA201: the paged-speculative regression.
+
+Never imported. The ISSUE-10 composition (speculative lanes over the
+paged KV pool) threads TWO compile-affecting parameters through the
+serve path: the draft signature AND the page geometry (the page table
+becomes a ninth executable input whose width is ``max_len //
+page_size``). This fixture keys the draft signature but DROPS ``paged``
+on the floor — exactly the half-lifted bug a future edit could
+reintroduce now that the two features share one code path: a dense-spec
+plan and a paged-spec plan would silently share one executable, and the
+paged one would run without its page-table input.
+"""
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheKey:
+    arch: str
+    batch: int
+    max_len: int
+    steps: int = 1
+    spec: tuple = ()
+
+
+def make_fake_paged_spec_step(arch, batch, max_len, spec, paged):
+    return (arch, batch, max_len, spec, paged)
+
+
+class MiniPagedSpecPlan:
+    def __init__(self, arch, cache):
+        self.arch = arch
+        self.cache = cache
+
+    def _key(self, batch, max_len, steps=1, spec=(), paged=()):
+        # BUG: ``paged`` picks the page-table width of the compiled
+        # program (and whether the draft KV twins live in the pool) but
+        # never reaches CacheKey.
+        return CacheKey(arch=self.arch, batch=batch, max_len=max_len,
+                        steps=steps, spec=spec)
+
+    def serve_executable(self, batch, max_len, steps=1, spec=(),
+                         paged=()):
+        build = lambda: make_fake_paged_spec_step(  # noqa: E731
+            self.arch, batch, max_len, spec, paged)
+        key = self._key(batch, max_len, steps=steps,
+                        spec=spec)  # BUG: paged unkeyed
+        return self.cache.get_or_build(key, build)

@@ -162,6 +162,18 @@ def test_cachekey_rule_catches_unkeyed_draft_signature():
     assert "draft_layers" in messages
 
 
+def test_cachekey_rule_catches_unkeyed_paged_field_in_spec_path():
+    """The paged-speculative twin (ISSUE 10): a key method that keeps
+    the draft signature but drops the page geometry goes red — a
+    dense-spec and a paged-spec plan must never share an executable,
+    since the paged one compiles with a ninth (page-table) input."""
+    report = run_rule("RA201", "cachekey_paged_spec_bad.py")
+    assert not report.ok
+    messages = " | ".join(f.message for f in report.findings)
+    assert "`paged`" in messages
+    assert "`spec`" not in messages      # spec IS keyed: not flagged
+
+
 # ---------------------------------------------------------------------------
 # ACCEPTANCE: the shipped tree is clean under the repo baseline
 # ---------------------------------------------------------------------------

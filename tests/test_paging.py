@@ -38,6 +38,12 @@ def check_invariants(alloc: PageAllocator, leases) -> None:
             assert p in alloc._refs, (i, p)
             if i >= lease.shared and i >= lease.published:
                 writable.append(p)
+        # draft pages are always writable (revocable by construction:
+        # never shared, never published) and a released lease holds none
+        assert not (lease.released and (lease.pages or lease.draft))
+        for p in lease.draft:
+            assert p in alloc._refs, p
+            writable.append(p)
     # no page is writable by two slots at once
     assert len(writable) == len(set(writable)), writable
     # a writable page is never a prefix-cache (shared) page
@@ -63,12 +69,13 @@ def _churn(alloc: PageAllocator, rng: np.random.Generator, rounds: int):
                for n in (5, 17, 33, 48)]
     live = []
     for _ in range(rounds):
-        op = rng.integers(0, 3)
+        op = rng.integers(0, 5)
         if op == 0:
             prompt = prompts[rng.integers(0, len(prompts))]
             need = _total_need(prompt, int(rng.integers(1, 9)))
-            if alloc.can_admit(prompt, need):
-                lease = alloc.admit(prompt, need)
+            lazy = bool(rng.random() < 0.5)
+            if alloc.can_admit(prompt, need, lazy=lazy):
+                lease = alloc.admit(prompt, need, lazy=lazy)
                 assert lease is not None
                 assert lease.shared_len <= len(prompt) - 1
                 live.append(lease)
@@ -79,6 +86,19 @@ def _churn(alloc: PageAllocator, rng: np.random.Generator, rounds: int):
         elif op == 2 and live:
             lease = live.pop(rng.integers(0, len(live)))
             alloc.release(lease)
+            if rng.random() < 0.25:
+                alloc.release(lease)    # double release must be a no-op
+        elif op == 3 and live:
+            # speculative write front: extend the lease with revocable
+            # draft pages (may fail under pressure — that is the valve)
+            lease = live[rng.integers(0, len(live))]
+            alloc.draft_lease(lease, int(rng.integers(0,
+                                                      alloc.page_size * 8)))
+        elif op == 4 and live:
+            # boundary accept decision at an arbitrary committed cursor
+            lease = live[rng.integers(0, len(live))]
+            span = (len(lease.pages) + len(lease.draft)) * alloc.page_size
+            alloc.resolve_draft(lease, int(rng.integers(0, span + 1)))
         check_invariants(alloc, live)
     for lease in live:
         alloc.release(lease)
@@ -191,6 +211,80 @@ def test_scratch_pages_pinned_and_stable():
     assert s3[:2] == s2
     check_invariants(alloc, [])
     assert alloc.pages_in_use == 3
+
+
+def test_release_is_idempotent_regression():
+    """Latent-bug regression: a lease released twice (a continuation
+    requeue whose slot is also freed at the boundary) must not push its
+    pages onto the free list twice — conservation survives, and the
+    released lease refuses further draft work."""
+    alloc = PageAllocator(page_count=8, page_size=4)
+    lease = alloc.admit((1, 2, 3, 4, 5), need=8)
+    other = alloc.admit((9, 9, 9), need=4)
+    alloc.release(lease)
+    free_after = alloc.pages_free
+    alloc.release(lease)                     # double release: no-op
+    assert alloc.pages_free == free_after
+    check_invariants(alloc, [other, lease])
+    with pytest.raises(ValueError):
+        alloc.draft_lease(lease, 4)
+    alloc.resolve_draft(lease, 99)           # no-op, not a crash
+    assert alloc.publish(lease, 5) == 0
+    check_invariants(alloc, [other, lease])
+
+
+def test_draft_lease_extend_commit_rollback():
+    """The spec x paged lifecycle: lazy admission leases the prompt span
+    only, draft_lease extends the run to the write front, and the
+    boundary resolution splices committed pages / rolls back the rest."""
+    alloc = PageAllocator(page_count=16, page_size=4)
+    lease = alloc.admit((1, 2, 3, 4, 5, 6), need=14, lazy=True)
+    assert len(lease.pages) == 2             # prompt span, not need
+    assert alloc.draft_lease(lease, 11)      # front at local 11: 3 pages
+    assert len(lease.draft) == 1
+    check_invariants(alloc, [lease])
+    alloc.resolve_draft(lease, 9)            # page [8,12) starts below 9
+    assert len(lease.pages) == 3 and lease.draft == []
+    assert alloc.draft_pages_committed == 1
+    assert alloc.draft_lease(lease, 14)      # extend again: 4th page
+    in_use = alloc.pages_in_use
+    alloc.resolve_draft(lease, 10)           # 12 >= 10: rolled back
+    assert len(lease.pages) == 3
+    assert alloc.draft_pages_rolled_back == 1
+    assert alloc.pages_in_use == in_use - 1
+    check_invariants(alloc, [lease])
+    alloc.release(lease)
+    check_invariants(alloc, [])
+    assert alloc.pages_in_use == 0
+
+
+def test_draft_release_drains_outstanding_draft_pages():
+    """Cancel mid-speculation: releasing a lease with unresolved draft
+    pages returns them too (nothing leaks, nothing double-frees)."""
+    alloc = PageAllocator(page_count=8, page_size=4)
+    lease = alloc.admit((1, 2, 3), need=12, lazy=True)
+    assert alloc.draft_lease(lease, 9)
+    assert len(lease.draft) == 2
+    alloc.release(lease)
+    assert alloc.pages_in_use == 0 and alloc.pages_free == 8
+    check_invariants(alloc, [lease])
+
+
+def test_spec_demand_and_lazy_admission_budget():
+    """Lazy admission charges the prompt span; the reserve argument
+    holds back the draft-lease headroom the scheduler's admission loop
+    accounts per speculative lane."""
+    alloc = PageAllocator(page_count=8, page_size=4)
+    assert alloc.spec_demand(4) == 2         # ceil(4/4) + 1
+    assert alloc.spec_demand(1) == 2
+    prompt = (1, 2, 3, 4, 5, 6)
+    assert not alloc.can_admit(prompt, need=40)
+    assert alloc.can_admit(prompt, need=40, lazy=True)
+    assert not alloc.can_admit(prompt, need=40, lazy=True, reserve=7)
+    lease = alloc.admit(prompt, need=40, lazy=True)
+    assert len(lease.pages) == 2
+    alloc.release(lease)
+    check_invariants(alloc, [])
 
 
 def test_bad_geometry_rejected():

@@ -316,3 +316,31 @@ def test_server_requires_continuous_schedule_and_start(plan, test_seed):
             await server.generate(DecodeRequest("r", [1], max_new_tokens=1))
 
     asyncio.run(unstarted())
+
+
+def test_quantile_nearest_rank_small_samples():
+    """Regression for the stats() percentile helper: the old
+    ``int(p * n)`` index overshot on small samples (p50 of two TTFTs
+    reported the slower one; p50 of three skipped the median by luck of
+    truncation). The shared nearest-rank definition — index
+    ``ceil(p * n) - 1``, clamped — is pinned across n in {1, 2, 3, 100}
+    and is what server TTFT, bucket latency, and benchmark tick
+    percentiles all use now."""
+    from repro.serve.batcher import quantile
+
+    assert quantile([], 0.5) == 0.0
+    # n=1: the only sample answers every quantile
+    assert quantile([7.0], 0.5) == 7.0
+    assert quantile([7.0], 0.99) == 7.0
+    # n=2: p50 is the FIRST (rank ceil(1.0) = 1), p99 the second
+    assert quantile([2.0, 1.0], 0.5) == 1.0
+    assert quantile([1.0, 2.0], 0.99) == 2.0
+    # n=3: p50 is the true median
+    assert quantile([3.0, 1.0, 2.0], 0.5) == 2.0
+    assert quantile([3.0, 1.0, 2.0], 0.99) == 3.0
+    # n=100: classic nearest-rank ranks (p50 -> 50th, p99 -> 99th)
+    v = [float(i) for i in range(1, 101)]
+    assert quantile(v, 0.50) == 50.0
+    assert quantile(v, 0.99) == 99.0
+    assert quantile(v, 1.00) == 100.0
+    assert quantile(v, 0.0) == 1.0

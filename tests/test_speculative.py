@@ -24,6 +24,7 @@ import numpy as np
 import pytest
 from _serve_stubs import (
     check_spec_invariants,
+    run_paged_spec_host_trace,
     run_spec_host_trace,
     spec_expected_receipt,
 )
@@ -136,6 +137,62 @@ def test_continuation_outgrowing_bucket_delivers_partial():
     assert toks == spec_expected_receipt(2, len(toks))
 
 
+@pytest.mark.parametrize("seed", range(6))
+@pytest.mark.parametrize("k", [2, 4])
+def test_paged_spec_invariants_seeded_streams(seed, k):
+    """Speculative lanes over a REAL PageAllocator: random streams x
+    mismatch schedules x optional mid-speculation cancel. Receipts stay
+    exact through the page indirection, page invariants hold at every
+    boundary (one writer per page, shared pages never draft-writable),
+    and pages conserve after the drain."""
+    rng = np.random.default_rng(seed)
+    lengths = [(int(rng.integers(1, 7)), int(rng.integers(1, 13)))
+               for _ in range(int(rng.integers(1, 16)))]
+    mismatch = {int(p) for p in rng.integers(0, 40,
+                                             size=int(rng.integers(0, 12)))}
+    cancel_at = ((int(rng.integers(0, 24)), int(rng.integers(0, 64)))
+                 if rng.random() < 0.5 else None)
+    sched, reqs, results, canceled = run_paged_spec_host_trace(
+        lengths, k, batch=int(rng.integers(1, 4)), mismatch=mismatch,
+        cancel_at=cancel_at)
+    check_spec_invariants(sched, reqs, results, canceled)
+    assert sched.cancellations == len(canceled)
+
+
+def test_paged_spec_cancel_mid_speculation_reclaims_pages():
+    """A cancel landing while the lane holds draft pages must reclaim
+    the whole lease — committed and draft alike (the harness asserts
+    only scratch + prefix-cache pages remain in use after the drain)."""
+    sched, reqs, results, canceled = run_paged_spec_host_trace(
+        [(3, 10), (2, 8), (4, 6)], 4, batch=2,
+        mismatch=set(range(0, 40, 2)), cancel_at=(4, 0))
+    check_spec_invariants(sched, reqs, results, canceled)
+    assert canceled
+
+
+def test_paged_chunked_prefill_meets_speculation():
+    """Long prompt (many micro-runs of feeds) x hostile mismatches x
+    page-local coordinates: the accept-prefix law holds unchanged and
+    the lease's committed run grows page by page."""
+    sched, reqs, results, _ = run_paged_spec_host_trace(
+        [(40, 6)], 8, batch=1, max_len=128,
+        mismatch=set(range(0, 60, 3)))
+    check_spec_invariants(sched, reqs, results)
+    assert results["s0"].tokens == spec_expected_receipt(40, 6)
+    assert sched.spec_rollbacks > 0
+
+
+def test_paged_spec_rollbacks_requeue_and_release():
+    """The continuation-requeue path under paging: a hostile draft
+    exhausts the window, the slot parks, and its lease is released (the
+    harness would fail conservation if the requeue leaked it)."""
+    sched, reqs, results, _ = run_paged_spec_host_trace(
+        [(2, 12)], 8, batch=1, max_len=32, mismatch=set(range(64)))
+    check_spec_invariants(sched, reqs, results)
+    assert sched.spec_continuations >= 1
+    assert results["s0"].tokens == spec_expected_receipt(2, 12)
+
+
 def test_spec_counters_and_stats_shape():
     """Counter arithmetic: a perfect draft accepts every drafted token,
     the stats block exposes the acceptance headline, and feeds are never
@@ -209,29 +266,41 @@ def continuous_reference(cfg, mesh, params):
 @pytest.mark.parametrize("k", [1, 4])
 @pytest.mark.parametrize("quantized", [False, True],
                          ids=["float", "quantized"])
+@pytest.mark.parametrize("paged", [False, True],
+                         ids=["dense", "paged"])
 def test_speculative_matches_plain_continuous(cfg, mesh, params, k,
-                                              quantized,
+                                              quantized, paged,
                                               continuous_reference):
     """Greedy streams with speculation on are token-identical to plain
-    continuous decode at the same k — acceptance commits exactly the
-    target's argmax stream, rollbacks are invisible in the output, and
-    the stats expose the lane's accounting."""
+    continuous decode at the same k — acceleration, never a model change
+    — dense AND paged alike: the paged axis routes draft+verify writes
+    through draft-page leases (page_size 4 so leases actually extend and
+    roll back mid-trace), and the stream must be unchanged."""
     ref = continuous_reference(k, quantized)
     with mesh:
         b = ServeBatcher(cfg, mesh, quantized=quantized, policy=_POLICY,
                          schedule="continuous", steps_per_dispatch=k,
+                         paged=4 if paged else None,
                          speculative=k).load_params(params)
         for rid, p, n in _SPEC_TRACE:
             b.submit(DecodeRequest(rid, p, max_new_tokens=n))
         res = {r: v.tokens for r, v in b.run().items()}
     for rid, _, n in _SPEC_TRACE:
-        assert res[rid] == ref[rid], (k, quantized, rid)
+        assert res[rid] == ref[rid], (k, quantized, paged, rid)
         assert len(res[rid]) == n
     s = b.scheduler.stats()["spec"]
     assert s["spec_k"] == k
     assert s["verifies"] > 0
     assert 0 < s["accepted_tokens"] <= s["draft_tokens"]
     assert b.scheduler.refills > 0     # parity held ACROSS slot reuse
+    if paged:
+        # every lease resolved and released: only scratch + prefix-cache
+        # pages remain, and rollbacks actually exercised draft pages
+        st = b.pool.allocator.stats()
+        assert st["pages_in_use"] == \
+            st["scratch_pages"] + st["prefix_entries"]
+        assert st["draft_pages_committed"] + \
+            st["draft_pages_rolled_back"] > 0
 
 
 def test_rollback_stress_shallow_draft(cfg, mesh, params,
@@ -288,6 +357,9 @@ def test_speculative_validation_errors(cfg, mesh):
     with pytest.raises(ValueError, match="depth|\\[1,"):
         ServeBatcher(cfg, mesh, schedule="continuous", steps_per_dispatch=2,
                      speculative=2, draft="prefix:9")
-    with pytest.raises(ValueError, match="dense"):
+    # paged x speculative is legal now, but only with draft-lease
+    # headroom: a pool that cannot back one lane + its draft demand
+    # fails loudly instead of deadlocking admission
+    with pytest.raises(ValueError, match="page_count"):
         ServeBatcher(cfg, mesh, schedule="continuous", steps_per_dispatch=2,
-                     speculative=2, paged=True)
+                     speculative=2, paged=(2, 8))
